@@ -1,0 +1,69 @@
+"""Paper Fig. 11: dynamic windows — the fill-and-drain pattern.
+
+Insert+query until the window reaches n, then evict until 0, repeat, via a
+single compiled lax.scan with masked ops (the JAX form of a dynamic window).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import ALGOS, OPERATORS
+from repro.core import ALGORITHMS
+
+
+def fill_drain_throughput(algo_name, monoid, n, total_items):
+    algo = ALGORITHMS[algo_name]
+
+    def step(carry, x):
+        st, filling = carry
+        sz = algo.size(st)
+        do_insert = filling & (sz < n)
+        st = jax.lax.cond(
+            do_insert, lambda s: algo.insert(monoid, s, x), lambda s: s, st
+        )
+        st = jax.lax.cond(
+            ~filling & (sz > 0), lambda s: algo.evict(monoid, s), lambda s: s, st
+        )
+        q = algo.query(monoid, st)
+        sz = algo.size(st)
+        filling = jnp.where(sz >= n, False, jnp.where(sz <= 0, True, filling))
+        return (st, filling), q
+
+    chunk = min(total_items, 50_000)
+    xs = jnp.asarray(np.random.default_rng(0).uniform(0, 97, chunk), jnp.float32)
+    run = jax.jit(
+        lambda c: jax.lax.scan(step, c, xs)[0], donate_argnums=0
+    )
+    carry = (algo.init(monoid, n + 2), jnp.asarray(True))
+    carry = run(carry)
+    jax.block_until_ready(jax.tree.leaves(carry)[0])
+    done, t0 = 0, time.perf_counter()
+    while done < total_items:
+        carry = run(carry)
+        done += chunk
+    jax.block_until_ready(jax.tree.leaves(carry)[0])
+    return done / (time.perf_counter() - t0)
+
+
+def main(windows=(2**4, 2**8), items=60_000, operators=("sum", "geomean")):
+    rows = []
+    for op_name in operators:
+        for algo in ALGOS:
+            if algo == "recalc":
+                continue
+            for w in windows:
+                thr = fill_drain_throughput(algo, OPERATORS[op_name](), w, items)
+                rows.append(
+                    f"dynamic,{op_name},{algo},window={w},items_per_s={thr:.0f}"
+                )
+                print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 12: event-time windows on bursty real-like data.
+
+The DEBS 2012 manufacturing dataset is not available offline; we synthesize a
+statistically similar stream (≈100 Hz arrivals, bursty inter-arrival times,
+occasional gaps causing bulk evictions) and maintain a τ-second event-time
+window of the paper's Query-2-style aggregation (relative variation =
+windowed variance / mean, via the Welford-merge monoid).
+
+Reported: items/s and the per-round ⊗-count distribution — bulk evictions
+make ALL algorithms pay O(k) for k expired items (matching the paper's
+observation that bulk evictions equalize max latency), but per-eviction cost
+stays O(1) only for DABA/DABA Lite.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import ALGORITHMS, counting, monoids
+
+
+def synth_event_stream(n, seed=0):
+    rng = np.random.default_rng(seed)
+    # bursty arrivals: mixture of 100 Hz base rate and pauses
+    gaps = rng.exponential(0.01, n)
+    pause = rng.random(n) < 0.001
+    gaps[pause] += rng.exponential(2.0, pause.sum())
+    times = np.cumsum(gaps)
+    vals = 50 + 10 * np.sin(times / 60) + rng.standard_normal(n)
+    return times, vals
+
+
+def run_eventtime(algo_name, tau, n_items=20_000):
+    m, ctr = counting(monoids.variance_monoid())
+    algo = ALGORITHMS[algo_name]
+    cap = 4096
+    st = algo.init(m, cap)
+    times, vals = synth_event_stream(n_items)
+    ts_buf = []
+    counts = np.empty(n_items, np.int64)
+    t0 = time.perf_counter()
+    for i in range(n_items):
+        ctr.reset()
+        if len(ts_buf) >= cap - 1:  # capacity guard (host-side resize point)
+            st = algo.evict(m, st)
+            ts_buf.pop(0)
+        st = algo.insert(m, st, float(vals[i]))
+        ts_buf.append(times[i])
+        while ts_buf and ts_buf[0] < times[i] - tau:
+            st = algo.evict(m, st)
+            ts_buf.pop(0)
+        algo.query(m, st)
+        counts[i] = ctr.count
+    wall = time.perf_counter() - t0
+    return n_items / wall, counts
+
+
+def main(tau=10.0, n_items=6000):
+    rows = []
+    for algo in ["two_stacks_lite", "daba", "daba_lite"]:
+        thr, counts = run_eventtime(algo, tau, n_items)
+        rows.append(
+            f"eventtime,relvar,{algo},tau={tau},items_per_s={thr:.0f},"
+            f"combines_p50={np.percentile(counts, 50):.0f},"
+            f"combines_p99={np.percentile(counts, 99):.0f},"
+            f"combines_max={counts.max()}"
+        )
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Paper Fig. 9: per-operation latency, static count-based window.
+
+Reports (a) exact ⊗-invocations per round — worst case is the paper's
+headline claim — and (b) wall-clock per jitted round.  Expect: Two-Stacks
+variants show rare O(n) spikes (max ≫ p50); DABA/DABA Lite worst ≈ median.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import ALGOS, OPERATORS, count_rounds, pctile_row, time_rounds
+
+
+def _flatfit_counts(op_name, window, rounds):
+    """FlatFIT rounds (evict, insert, compressing query) — paper §7 set."""
+    from repro.core import counting, flatfit
+
+    m, ctr = counting(OPERATORS[op_name]())
+    st = flatfit.init(m, window + 2)
+    for i in range(window):
+        st = flatfit.insert(m, st, float(i % 97))
+    counts = np.empty(rounds, np.int64)
+    vals = np.random.default_rng(0).uniform(0, 97, rounds)
+    for i in range(rounds):
+        ctr.reset()
+        st = flatfit.evict(m, st)
+        st = flatfit.insert(m, st, float(vals[i]))
+        _, st = flatfit.query_mut(m, st)
+        counts[i] = ctr.count
+    return counts
+
+
+def main(window=2**12, rounds=1500, operators=("sum", "geomean", "bloom")):
+    rows = []
+    for op_name in operators:
+        for algo in ALGOS:
+            if algo == "recalc":
+                continue  # O(n) per query; covered by throughput bench
+            counts = count_rounds(algo, OPERATORS[op_name](), min(window, 256), rounds // 4)
+            rows.append(
+                f"latency_combines,{op_name},{algo},"
+                f"p50={np.percentile(counts, 50):.0f},p99={np.percentile(counts, 99):.0f},"
+                f"max={counts.max()}"
+            )
+        counts = _flatfit_counts(op_name, min(window, 256), rounds // 4)
+        rows.append(
+            f"latency_combines,{op_name},flatfit,"
+            f"p50={np.percentile(counts, 50):.0f},p99={np.percentile(counts, 99):.0f},"
+            f"max={counts.max()}"
+        )
+        for algo in ALGOS:
+            if algo == "recalc":
+                continue
+            lat = time_rounds(algo, OPERATORS[op_name](), window, rounds)
+            rows.append(f"latency_wall_us,{op_name},{algo}," + pctile_row("", lat).lstrip(","))
+    for r in rows:
+        print(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

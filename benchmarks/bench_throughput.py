@@ -1,0 +1,24 @@
+"""Paper Fig. 10: throughput vs window size, static count-based windows."""
+
+from __future__ import annotations
+
+from benchmarks.common import ALGOS, OPERATORS, scan_throughput
+
+
+def main(windows=(2**2, 2**6, 2**10), items=100_000, operators=("sum", "bloom")):
+    rows = []
+    for op_name in operators:
+        for algo in ALGOS:
+            if algo == "recalc" and op_name == "bloom":
+                continue  # O(n·bloom) per query: prohibitively slow, as expected
+            for w in windows:
+                thr = scan_throughput(algo, OPERATORS[op_name](), w, items)
+                rows.append(
+                    f"throughput,{op_name},{algo},window={w},items_per_s={thr:.0f}"
+                )
+                print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

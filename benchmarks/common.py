@@ -1,0 +1,121 @@
+"""Shared benchmark machinery.
+
+The paper's C++ benchmarks (§7) measure per-operation wall time over 10M+
+rounds.  On this CPU-only container we measure two complementary signals:
+
+  * wall-clock per round for JIT-compiled op sequences (dispatch-dominated
+    but comparable across algorithms), and
+  * exact ⊗-invocation counts per operation (hardware-independent — the
+    quantity the paper's theorems bound, and the dominant cost when the
+    operator is expensive, e.g. bloom).
+
+Scales are reduced (10M → 20k rounds; window 2^14 → 2^12 default) to fit the
+single-core budget; the relative ordering matches the paper's findings.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALGORITHMS, counting, monoids
+
+OPERATORS = {
+    # the paper's cost spectrum: cheap / medium / expensive
+    "sum": lambda: monoids.sum_monoid(),
+    "geomean": lambda: monoids.geomean_monoid(),
+    "bloom": lambda: monoids.bloom_monoid(num_words=64),
+}
+
+ALGOS = ["two_stacks", "two_stacks_lite", "daba", "daba_lite", "recalc"]
+
+
+def make_round_fn(algo_name: str, monoid, jit: bool = True):
+    """One paper round: evict, insert, query (static window)."""
+    algo = ALGORITHMS[algo_name]
+
+    def round_fn(state, v):
+        state = algo.evict(monoid, state)
+        state = algo.insert(monoid, state, v)
+        q = algo.query(monoid, state)
+        return state, q
+
+    return jax.jit(round_fn) if jit else round_fn
+
+
+def fill(algo_name, monoid, n, cap):
+    algo = ALGORITHMS[algo_name]
+    st = algo.init(monoid, cap)
+    ins = jax.jit(lambda s, v: algo.insert(monoid, s, v))
+    for i in range(n):
+        st = ins(st, jnp.float32(i % 97))
+    return st
+
+
+def time_rounds(algo_name, monoid, window, rounds, warmup=200):
+    """Per-round wall latencies (seconds)."""
+    st = fill(algo_name, monoid, window, window + 2)
+    rf = make_round_fn(algo_name, monoid)
+    vals = np.random.default_rng(0).uniform(0, 97, rounds + warmup).astype(np.float32)
+    for i in range(warmup):
+        st, q = rf(st, vals[i])
+    jax.block_until_ready(q)
+    lat = np.empty(rounds)
+    for i in range(rounds):
+        t0 = time.perf_counter()
+        st, q = rf(st, vals[warmup + i])
+        jax.block_until_ready(q)
+        lat[i] = time.perf_counter() - t0
+    return lat
+
+
+def count_rounds(algo_name, base_monoid, window, rounds):
+    """Exact ⊗-invocations per round (evict+insert+query), eager."""
+    m, ctr = counting(base_monoid)
+    algo = ALGORITHMS[algo_name]
+    st = algo.init(m, window + 2)
+    for i in range(window):
+        st = algo.insert(m, st, float(i % 97))
+    counts = np.empty(rounds, np.int64)
+    vals = np.random.default_rng(0).uniform(0, 97, rounds)
+    for i in range(rounds):
+        ctr.reset()
+        st = algo.evict(m, st)
+        st = algo.insert(m, st, float(vals[i]))
+        algo.query(m, st)
+        counts[i] = ctr.count
+    return counts
+
+
+def scan_throughput(algo_name, monoid, window, total_items, batch=1):
+    """Whole-stream compiled throughput (items/s) via lax.scan."""
+    algo = ALGORITHMS[algo_name]
+
+    def step(st, x):
+        st = algo.evict(monoid, st)
+        st = algo.insert(monoid, st, x)
+        return st, algo.query(monoid, st)
+
+    chunk = min(total_items, 50_000)
+    xs = jnp.asarray(
+        np.random.default_rng(0).uniform(0, 97, chunk).astype(np.float32)
+    )
+    run = jax.jit(lambda st: jax.lax.scan(step, st, xs)[0])
+    st = fill(algo_name, monoid, window, window + 2)
+    st = run(st)  # compile + warm
+    jax.block_until_ready(jax.tree.leaves(st)[0])
+    done, t0 = 0, time.perf_counter()
+    while done < total_items:
+        st = run(st)
+        done += chunk
+    jax.block_until_ready(jax.tree.leaves(st)[0])
+    return done / (time.perf_counter() - t0)
+
+
+def pctile_row(name, arr, scale=1e6):
+    a = np.asarray(arr, float) * scale
+    return (f"{name},min={a.min():.2f},p50={np.percentile(a, 50):.2f},"
+            f"p99={np.percentile(a, 99):.2f},max={a.max():.2f}")

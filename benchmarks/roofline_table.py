@@ -1,0 +1,55 @@
+"""Render the §Roofline table from the dry-run JSON records."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+COLS = (
+    "arch,shape,mesh,chips,t_compute_ms,t_memory_ms,t_collective_ms,"
+    "bottleneck,useful_frac,roofline_frac,note"
+)
+
+
+def load_all(dry_dir=None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dry_dir or DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render(recs) -> list[str]:
+    rows = [COLS]
+    for r in recs:
+        if r.get("skipped"):
+            rows.append(
+                f"{r['arch']},{r['shape']},{r['mesh']},-,-,-,-,skip,-,-,"
+                f"\"{r['note']}\""
+            )
+            continue
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['chips']},"
+            f"{r['t_compute']*1e3:.2f},{r['t_memory']*1e3:.2f},"
+            f"{r['t_collective']*1e3:.2f},{r['bottleneck']},"
+            f"{r['useful_fraction']:.3f},{r['roofline_fraction']:.4f},"
+        )
+    return rows
+
+
+def main():
+    recs = load_all()
+    if not recs:
+        print("roofline,no dry-run records found — run repro.launch.dryrun first")
+        return []
+    rows = render(recs)
+    for row in rows:
+        print(row)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,...,derived`` CSV lines.  Scales are reduced for the single-
+core CPU container (see benchmarks/common.py); EXPERIMENTS.md records a full
+run's output.
+
+  Fig 9  → bench_latency      per-op latency + exact ⊗-count distributions
+  Fig 10 → bench_throughput   throughput vs window size (static)
+  Fig 11 → bench_dynamic      fill-and-drain dynamic windows
+  Fig 12 → bench_eventtime    event-time windows, bursty stream
+  §2.1   → bench_batched      SIMD/vmap batched SWAG (beyond paper)
+  §Roofline → roofline_table  rendered from experiments/dryrun/*.json
+"""
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: latency,throughput,dynamic,eventtime,batched,roofline")
+    ap.add_argument("--quick", action="store_true", help="reduced sizes")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(name):
+        return want is None or name in want
+
+    from benchmarks import (
+        bench_batched,
+        bench_dynamic,
+        bench_eventtime,
+        bench_latency,
+        bench_throughput,
+        roofline_table,
+    )
+
+    if on("latency"):
+        print("# Fig 9 — latency")
+        if args.quick:
+            bench_latency.main(window=2**8, rounds=800, operators=("sum",))
+        else:
+            bench_latency.main()
+    if on("throughput"):
+        print("# Fig 10 — throughput (static windows)")
+        if args.quick:
+            bench_throughput.main(windows=(2**4,), items=50_000, operators=("sum",))
+        else:
+            bench_throughput.main()
+    if on("dynamic"):
+        print("# Fig 11 — throughput (dynamic fill-and-drain)")
+        if args.quick:
+            bench_dynamic.main(windows=(2**4,), items=30_000, operators=("sum",))
+        else:
+            bench_dynamic.main()
+    if on("eventtime"):
+        print("# Fig 12 — event-time windows (synthetic bursty stream)")
+        bench_eventtime.main(n_items=2000 if args.quick else 6000)
+    if on("batched"):
+        print("# beyond-paper — batched/SIMD SWAG")
+        if args.quick:
+            bench_batched.main(batches=(16,), steps=4000)
+        else:
+            bench_batched.main()
+    if on("roofline"):
+        print("# §Roofline — dry-run derived table")
+        roofline_table.main()
+
+
+if __name__ == "__main__":
+    main()

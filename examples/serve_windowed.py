@@ -1,0 +1,87 @@
+"""Serving demo: continuous batching + windowed-state decode.
+
+1. A DecodeEngine serves batched requests against a reduced llama model.
+2. The beyond-paper feature: an RWKV-style windowed-state decode where the
+   last-W-token SSM state is maintained by DABA Lite in worst-case O(1)
+   combines per token — bounded-context decoding whose per-token cost and
+   memory do not grow with history (the long_500k serving path).
+
+    PYTHONPATH=src python examples/serve_windowed.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core.windowed_state import ChunkedWindowedStateCell, WindowedStateCell
+from repro.models.factory import reduced_config
+from repro.models.transformer import build_model
+from repro.serve.engine import DecodeEngine, Request
+
+
+def continuous_batching():
+    print("— continuous batching over 2 slots, 6 requests —")
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = DecodeEngine(cfg, params, batch_slots=2, cache_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(4, 16))).astype(np.int32),
+                max_new=8)
+        for i in range(6)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    steps = 0
+    while eng.step() or eng.queue:
+        steps += 1
+        if steps > 100:
+            break
+    print(f"  served {sum(r.done for r in reqs)}/6 requests in {steps} engine steps")
+    print(f"  request 0 generated: {reqs[0].out}")
+
+
+def windowed_state_decode():
+    print("\n— windowed SSM state via DABA Lite (exact 256-token window) —")
+    H, K, V, W = 4, 16, 16, 256
+    cell = WindowedStateCell(H, K, V, W)
+    st = cell.init()
+    step = jax.jit(cell.update)
+    rng = np.random.default_rng(1)
+    d = jnp.asarray(rng.uniform(0.95, 1.0, (H, K, 1)), jnp.float32)
+    # warm + time per-token cost at two very different history lengths
+    for t in [100, 2000]:
+        u = jnp.asarray(rng.standard_normal((H, K, V)), jnp.float32)
+        while int(st.e - st.f) < min(t, W):
+            st, out = step(st, d, u)
+        t0 = time.perf_counter()
+        for _ in range(50):
+            st, out = step(st, d, u)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 50 * 1e6
+        print(f"  after ~{t:5d} tokens: {us:7.1f} µs/token (O(1): flat in history)")
+
+    print("\n— coarse-grained 500k-scale window (chunk=4096, 16 chunks) —")
+    cell2 = ChunkedWindowedStateCell(H, K, V, chunk=4096, window_chunks=16)
+    st2 = cell2.init()
+    step2 = jax.jit(cell2.update)
+    u = jnp.asarray(rng.standard_normal((H, K, V)), jnp.float32)
+    st2, out = step2(st2, d, u)  # compile
+    t0 = time.perf_counter()
+    for _ in range(200):
+        st2, out = step2(st2, d, u)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) / 200 * 1e6
+    ring = cell2.window_chunks + 1
+    print(f"  {us:.1f} µs/token; state memory = {ring} chunk aggregates "
+          f"(not 65536 per-token maps) — paper §8.2 coarse-grained sliding")
+
+
+if __name__ == "__main__":
+    continuous_batching()
+    windowed_state_decode()

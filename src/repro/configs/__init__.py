@@ -1,0 +1,39 @@
+"""Architecture registry: the 10 assigned configs, selectable via --arch."""
+
+from repro.configs import shapes
+from repro.configs.arctic_480b import CONFIG as arctic_480b
+from repro.configs.codeqwen1_5_7b import CONFIG as codeqwen1_5_7b
+from repro.configs.gemma2_27b import CONFIG as gemma2_27b
+from repro.configs.grok_1_314b import CONFIG as grok_1_314b
+from repro.configs.llama3_2_1b import CONFIG as llama3_2_1b
+from repro.configs.minitron_8b import CONFIG as minitron_8b
+from repro.configs.qwen2_vl_2b import CONFIG as qwen2_vl_2b
+from repro.configs.rwkv6_1_6b import CONFIG as rwkv6_1_6b
+from repro.configs.whisper_large_v3 import CONFIG as whisper_large_v3
+from repro.configs.zamba2_1_2b import CONFIG as zamba2_1_2b
+
+ARCHS = {
+    c.name: c
+    for c in [
+        llama3_2_1b,
+        gemma2_27b,
+        minitron_8b,
+        codeqwen1_5_7b,
+        qwen2_vl_2b,
+        arctic_480b,
+        grok_1_314b,
+        whisper_large_v3,
+        rwkv6_1_6b,
+        zamba2_1_2b,
+    ]
+}
+
+
+def get_config(name: str):
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+SHAPES = shapes.SHAPES
+LONG_CONTEXT_ARCHS = shapes.LONG_CONTEXT_ARCHS

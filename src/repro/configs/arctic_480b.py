@@ -1,0 +1,27 @@
+"""arctic-480b [moe] — 128 experts top-2 + dense residual
+[hf:Snowflake/snowflake-arctic-base; hf].
+
+35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2 with a
+parallel dense-residual MLP per layer (arctic's dense+MoE hybrid design).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    num_experts=128,
+    experts_per_token=2,
+    moe_dense_residual=True,
+    tie_embeddings=False,
+    # 56 heads don't divide the 16-way model axis: shard the attention
+    # section's batch over data×model instead (4.7x roofline win, see
+    # EXPERIMENTS.md §Perf).
+    pin_attn_batch=True,
+)

@@ -1,0 +1,26 @@
+"""gemma2-27b [dense] — local+global alternating attention, logit softcap
+[arXiv:2408.00118; hf].
+
+46L d_model=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.  Even layers use a
+4096-token sliding window (the framework's ring-KV eviction path); odd layers
+are global.  Attention softcap 50, final-logit softcap 30.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-27b",
+    family="dense",
+    num_layers=46,
+    d_model=4608,
+    num_heads=32,
+    num_kv_heads=16,
+    d_ff=36864,
+    vocab_size=256000,
+    head_dim=128,
+    attn_pattern="alternating",
+    local_window=4096,
+    attn_softcap=50.0,
+    logit_softcap=30.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,46 @@
+"""Per-architecture runtime profiles: the distributed-optimization knobs
+that make each (arch × shape) cell fit a 16 GB/chip v5e pod.
+
+  accum        gradient-accumulation microbatch count for train_4k
+               (activation temp memory ∝ global_batch / accum)
+  opt_dtype    AdamW m/v storage dtype (bf16 for the giant MoEs: params +
+               optimizer in f32 exceed a pod's aggregate HBM)
+  fsdp         shard large parameter leaves over the data axes as well
+               (ZeRO-3-style; per-layer JIT all-gather inside the scan)
+  fsdp_serve   same for the read-only serving params (prefill/decode)
+
+Derived empirically from the dry-run memory_analysis (EXPERIMENTS.md
+§Dry-run records before/after).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class RunProfile:
+    accum: int = 4
+    opt_dtype: object = jnp.float32
+    fsdp: bool = False
+    fsdp_serve: bool = True  # serving params are read-only: always shard
+
+
+PROFILES = {
+    "llama3.2-1b": RunProfile(accum=2),
+    "gemma2-27b": RunProfile(accum=8, fsdp=True),
+    "minitron-8b": RunProfile(accum=4, fsdp=True),
+    "codeqwen1.5-7b": RunProfile(accum=4, fsdp=True),
+    "qwen2-vl-2b": RunProfile(accum=2),
+    "arctic-480b": RunProfile(accum=16, opt_dtype=jnp.bfloat16, fsdp=True),
+    "grok-1-314b": RunProfile(accum=16, opt_dtype=jnp.bfloat16, fsdp=True),
+    "whisper-large-v3": RunProfile(accum=8),
+    "rwkv6-1.6b": RunProfile(accum=2),
+    "zamba2-1.2b": RunProfile(accum=2),
+}
+
+
+def get_profile(arch: str) -> RunProfile:
+    return PROFILES.get(arch, RunProfile())

@@ -1,0 +1,23 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution [arXiv:2409.12191; hf].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.  Backbone only: the
+vision frontend is a STUB — input_specs() provides precomputed patch
+embeddings plus the 3-stream (t, h, w) M-RoPE position ids.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    d_ff=8960,
+    vocab_size=151936,
+    mrope=True,
+    embed_inputs=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)

@@ -1,0 +1,21 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay [arXiv:2404.05892; unverified].
+
+24L d_model=2048 (attention-free) d_ff=7168 vocab=65536.  The per-token state
+update is an affine map — the non-invertible, non-commutative monoid that the
+paper's DABA Lite maintains for exact windowed decode (long_500k path).
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,  # head size 64
+    num_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv=True,
+    tie_embeddings=False,
+)

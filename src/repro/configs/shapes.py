@@ -1,0 +1,42 @@
+"""Assigned input shapes (identical across all 10 LM architectures).
+
+  train_4k     seq_len=4096   global_batch=256   → train_step
+  prefill_32k  seq_len=32768  global_batch=32    → prefill (inference)
+  decode_32k   seq_len=32768  global_batch=128   → serve_step (1 new token,
+                                                    KV/state covers seq_len)
+  long_500k    seq_len=524288 global_batch=1     → serve_step; sub-quadratic
+                                                    archs only (see DESIGN.md)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# Architectures whose decode at 500k context is sub-quadratic / state-bounded.
+LONG_CONTEXT_ARCHS = {"gemma2-27b", "rwkv6-1.6b", "zamba2-1.2b"}
+
+
+def cells(arch_names):
+    """All (arch, shape) dry-run cells, with inapplicable ones marked skip."""
+    out = []
+    for a in arch_names:
+        for s in SHAPES.values():
+            skip = s.name == "long_500k" and a not in LONG_CONTEXT_ARCHS
+            out.append((a, s.name, skip))
+    return out

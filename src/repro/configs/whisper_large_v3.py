@@ -1,0 +1,26 @@
+"""whisper-large-v3 [audio] — enc-dec, conv frontend stub
+[arXiv:2212.04356; unverified].
+
+32L d_model=1280 20H (kv=20) d_ff=5120 vocab=51866.  32 encoder + 32 decoder
+layers; the mel+conv frontend is a STUB — input_specs() provides precomputed
+frame embeddings (1500 frames = 30 s).  Decoder self-attn is causal; cross
+attention reads the encoder output.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    encoder_layers=32,
+    encoder_seq=1500,
+    embed_inputs=False,  # decoder consumes token ids; frames via batch["frames"]
+    tie_embeddings=True,
+)

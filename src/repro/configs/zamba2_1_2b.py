@@ -1,0 +1,26 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; hf].
+
+38L d_model=2048 32H (GQA kv=32) d_ff=8192 vocab=32000, ssm_state=64.  A
+single shared attention+MLP block (one parameter set) is applied every 6
+Mamba-2 layers; at long context it runs with a sliding window, whose KV ring
+is the paper's FIFO eviction.
+"""
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm_state=64,
+    mamba=True,
+    shared_attn_every=6,
+    local_window=4096,
+    tie_embeddings=True,
+)

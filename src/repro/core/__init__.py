@@ -1,0 +1,63 @@
+"""repro.core — the paper's contribution: worst-case O(1) sliding-window
+aggregation (DABA / DABA Lite) and the algorithm family it belongs to.
+
+Modules
+-------
+monoids          lift/combine/lower aggregation framework (paper §2.2)
+swag_base        functional-state machinery shared by all algorithms
+recalc           recalculate-from-scratch baseline (O(n) query)
+soe              subtract-on-evict baseline (invertible monoids only)
+two_stacks       amortized O(1) / worst-case O(n), 2n space (paper §3)
+two_stacks_lite  amortized O(1) / worst-case O(n), n+1 space (paper §4)
+flatfit          amortized O(1) index traverser (paper §7 baseline; eager)
+daba             worst-case O(1), 2n space (paper §5)
+daba_lite        worst-case O(1), n+2 space (paper §6) — headline algorithm
+batched          vmapped multi-window SWAG, shardable over meshes
+windowed_state   sliding-window SSM/linear-attention state via DABA Lite
+"""
+
+from repro.core import (
+    daba,
+    daba_lite,
+    flatfit,
+    monoids,
+    recalc,
+    soe,
+    swag_base,
+    two_stacks,
+    two_stacks_lite,
+)
+from repro.core.monoids import Monoid, counting, get_monoid, available_monoids
+from repro.core.swag_base import SWAG
+
+ALGORITHMS = {
+    "recalc": recalc,
+    "soe": soe,
+    "two_stacks": two_stacks,
+    "two_stacks_lite": two_stacks_lite,
+    "daba": daba,
+    "daba_lite": daba_lite,
+}
+
+# Algorithms that work for ANY associative monoid (soe needs invertibility).
+GENERAL_ALGORITHMS = {
+    k: v for k, v in ALGORITHMS.items() if k != "soe"
+}
+
+# The paper's worst-case O(1) contributions.
+CONSTANT_TIME_ALGORITHMS = {"daba": daba, "daba_lite": daba_lite}
+
+# FlatFIT (paper §7 comparison set) is eager-only (mutable pointer chasing,
+# queries compress) — kept out of ALGORITHMS, which assumes pytree states.
+EAGER_ALGORITHMS = {"flatfit": flatfit}
+
+__all__ = [
+    "Monoid",
+    "SWAG",
+    "counting",
+    "get_monoid",
+    "available_monoids",
+    "ALGORITHMS",
+    "GENERAL_ALGORITHMS",
+    "CONSTANT_TIME_ALGORITHMS",
+]

@@ -1,0 +1,174 @@
+"""DABA — De-Amortized Banker's Aggregator (paper §5).
+
+Worst-case O(1) SWAG: at most 4 ⊗-invocations per insert, 3 per evict, 1 per
+query; space for 2n partial aggregates (each deque slot holds val + agg).
+
+The deque is a ring buffer with six monotone logical pointers
+
+    F ≤ L ≤ R ≤ A ≤ B ≤ E
+
+demarcating sublists (paper Fig. 5):  l_F = [F,B) is the front list whose
+leftmost portion [F,L) aggregates rightward to B; l_L = [L,R) aggregates
+rightward to R; l_R = [R,A) aggregates leftward from R; l_A = [A,B)
+aggregates rightward to B; l_B = [B,E) aggregates leftward from B.  The size
+invariants
+
+    (|l_F| = 0 ∧ |l_B| = 0) ∨
+    (|l_L| + |l_R| + |l_A| + 1 = |l_F| - |l_B|  ∧  |l_L| = |l_R|)
+
+guarantee the incremental reversal of the last flip completes exactly one
+operation before the next flip is due.  ``fixup`` restores the invariants via
+the four cases *singleton*, *flip*, *shift*, *shrink* — each O(1).
+
+In eager mode only the taken case executes (counts match Theorem 10); under
+``vmap`` all cases lower to selects — uniform constant work per lane.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import (
+    alloc_ring,
+    i32,
+    lazy_cond,
+    ring_get,
+    ring_set,
+    swag_state,
+)
+
+PyTree = object
+
+
+@swag_state
+class DabaState:
+    vals: PyTree  # ring: window contents v_i (lifted)
+    aggs: PyTree  # ring: partial aggregates per the sublist invariants
+    f: jax.Array
+    l: jax.Array
+    r: jax.Array
+    a: jax.Array
+    b: jax.Array
+    e: jax.Array
+    capacity: int
+
+
+def _replace(state: DabaState, **kw) -> DabaState:
+    fields = dict(
+        vals=state.vals, aggs=state.aggs, f=state.f, l=state.l, r=state.r,
+        a=state.a, b=state.b, e=state.e, capacity=state.capacity,
+    )
+    fields.update(kw)
+    return DabaState(**fields)
+
+
+def init(monoid: Monoid, capacity: int) -> DabaState:
+    return DabaState(
+        vals=alloc_ring(monoid, capacity),
+        aggs=alloc_ring(monoid, capacity),
+        f=i32(0), l=i32(0), r=i32(0), a=i32(0), b=i32(0), e=i32(0),
+        capacity=capacity,
+    )
+
+
+def size(state: DabaState):
+    return state.e - state.f
+
+
+# --- Π helpers (paper lines 1–10): O(1), no ⊗-invocations ------------------
+
+
+def _pi_f(m: Monoid, s: DabaState):
+    return lazy_cond(
+        s.f == s.b, lambda: m.identity(),
+        lambda: ring_get(s.aggs, s.f, s.capacity),
+    )
+
+
+def _pi_b(m: Monoid, s: DabaState):
+    return lazy_cond(
+        s.b == s.e, lambda: m.identity(),
+        lambda: ring_get(s.aggs, s.e - 1, s.capacity),
+    )
+
+
+def _pi_l(m: Monoid, s: DabaState):
+    return lazy_cond(
+        s.l == s.r, lambda: m.identity(),
+        lambda: ring_get(s.aggs, s.l, s.capacity),
+    )
+
+
+def _pi_r(m: Monoid, s: DabaState):
+    return lazy_cond(
+        s.r == s.a, lambda: m.identity(),
+        lambda: ring_get(s.aggs, s.a - 1, s.capacity),
+    )
+
+
+def _pi_a(m: Monoid, s: DabaState):
+    return lazy_cond(
+        s.a == s.b, lambda: m.identity(),
+        lambda: ring_get(s.aggs, s.a, s.capacity),
+    )
+
+
+def query(monoid: Monoid, state: DabaState):
+    return monoid.combine(_pi_f(monoid, state), _pi_b(monoid, state))
+
+
+# --- fixup (paper lines 21–32) ---------------------------------------------
+
+
+def _fixup(m: Monoid, s: DabaState) -> DabaState:
+    def singleton(s: DabaState) -> DabaState:
+        return _replace(s, b=s.e, a=s.e, r=s.e, l=s.e)
+
+    def non_singleton(s: DabaState) -> DabaState:
+        def flip(s: DabaState) -> DabaState:
+            # Relabel l_F → l_L and l_B → l_R by pointer moves alone; both
+            # already aggregate in the direction their new roles require.
+            return _replace(s, l=s.f, a=s.e, b=s.e)
+
+        s = lazy_cond(s.l == s.b, flip, lambda s: s, s)
+
+        def shift(s: DabaState) -> DabaState:
+            return _replace(s, a=s.a + 1, r=s.r + 1, l=s.l + 1)
+
+        def shrink(s: DabaState) -> DabaState:
+            # Top of l_L joins the leftmost front portion:
+            #   *L.agg ← Π_L ⊗ Π_R ⊗ Π_A              (2 ⊗-invocations)
+            new_l_agg = m.combine(
+                m.combine(_pi_l(m, s), _pi_r(m, s)), _pi_a(m, s)
+            )
+            aggs = ring_set(s.aggs, s.l, new_l_agg, s.capacity)
+            s = _replace(s, aggs=aggs, l=s.l + 1)
+            # Top of l_R joins the accumulator l_A:
+            #   *(A-1).agg ← *(A-1).val ⊗ Π_A          (1 ⊗-invocation)
+            new_a_agg = m.combine(
+                ring_get(s.vals, s.a - 1, s.capacity), _pi_a(m, s)
+            )
+            aggs = ring_set(s.aggs, s.a - 1, new_a_agg, s.capacity)
+            return _replace(s, aggs=aggs, a=s.a - 1)
+
+        return lazy_cond(s.l == s.r, shift, shrink, s)
+
+    return lazy_cond(s.f == s.b, singleton, non_singleton, s)
+
+
+def insert(monoid: Monoid, state: DabaState, value) -> DabaState:
+    v = monoid.lift(value)
+    agg = monoid.combine(_pi_b(monoid, state), v)  # 1 ⊗-invocation
+    s = _replace(
+        state,
+        vals=ring_set(state.vals, state.e, v, state.capacity),
+        aggs=ring_set(state.aggs, state.e, agg, state.capacity),
+        e=state.e + 1,
+    )
+    return _fixup(monoid, s)
+
+
+def evict(monoid: Monoid, state: DabaState) -> DabaState:
+    s = _replace(state, f=state.f + 1)
+    return _fixup(monoid, s)

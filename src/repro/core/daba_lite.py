@@ -1,0 +1,162 @@
+"""DABA Lite (paper §6) — worst-case O(1) SWAG in n+2 partial aggregates.
+
+This is the paper's headline new algorithm.  Relative to DABA it drops the
+val fields entirely: left-aggregated sublists never have their vals read, and
+right-aggregated sublists only need their *total* aggregate — kept in the two
+scalars ``aggRA`` (product of l_R ∪ l_A, valid whenever L ≠ R) and ``aggB``
+(product of l_B).  Deque slots hold a single partial aggregate:
+
+    [F,L): aggregate from element to right end of l_F (i.e., to B)
+    [L,R): aggregate from element to right end of l_L (i.e., to R)
+    [R,A): RAW lifted window value v_i
+    [A,B): aggregate from element to right end of l_A (i.e., to B)
+    [B,E): RAW lifted window value v_i
+
+Worst case ⊗-invocations: ≤3 per insert, ≤2 per evict, ≤1 per query
+(Theorem 13); size invariants identical to DABA.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import (
+    alloc_ring,
+    i32,
+    lazy_cond,
+    ring_get,
+    ring_set,
+    swag_state,
+)
+
+PyTree = object
+
+
+@swag_state
+class DabaLiteState:
+    deque: PyTree  # ring of single partial aggregates
+    agg_ra: PyTree  # product of l_R ∪ l_A (valid when L ≠ R)
+    agg_b: PyTree  # product of l_B
+    f: jax.Array
+    l: jax.Array
+    r: jax.Array
+    a: jax.Array
+    b: jax.Array
+    e: jax.Array
+    capacity: int
+
+
+def _replace(state: DabaLiteState, **kw) -> DabaLiteState:
+    fields = dict(
+        deque=state.deque, agg_ra=state.agg_ra, agg_b=state.agg_b,
+        f=state.f, l=state.l, r=state.r, a=state.a, b=state.b, e=state.e,
+        capacity=state.capacity,
+    )
+    fields.update(kw)
+    return DabaLiteState(**fields)
+
+
+def init(monoid: Monoid, capacity: int) -> DabaLiteState:
+    return DabaLiteState(
+        deque=alloc_ring(monoid, capacity),
+        agg_ra=monoid.identity(),
+        agg_b=monoid.identity(),
+        f=i32(0), l=i32(0), r=i32(0), a=i32(0), b=i32(0), e=i32(0),
+        capacity=capacity,
+    )
+
+
+def size(state: DabaLiteState):
+    return state.e - state.f
+
+
+# --- Π helpers (paper lines 1–6): O(1), no ⊗-invocations -------------------
+
+
+def _pi_f(m: Monoid, s: DabaLiteState):
+    return lazy_cond(
+        s.f == s.b, lambda: m.identity(),
+        lambda: ring_get(s.deque, s.f, s.capacity),
+    )
+
+
+def _pi_l(m: Monoid, s: DabaLiteState):
+    return lazy_cond(
+        s.l == s.r, lambda: m.identity(),
+        lambda: ring_get(s.deque, s.l, s.capacity),
+    )
+
+
+def _pi_a(m: Monoid, s: DabaLiteState):
+    return lazy_cond(
+        s.a == s.b, lambda: m.identity(),
+        lambda: ring_get(s.deque, s.a, s.capacity),
+    )
+
+
+def query(monoid: Monoid, state: DabaLiteState):
+    return monoid.combine(_pi_f(monoid, state), state.agg_b)
+
+
+# --- fixup (paper lines 18–34) ---------------------------------------------
+
+
+def _fixup(m: Monoid, s: DabaLiteState) -> DabaLiteState:
+    def singleton(s: DabaLiteState) -> DabaLiteState:
+        # |l_F| = 0 ∧ |l_B| = 1: relabel the lone raw value as the new l_F
+        # (a singleton's raw value IS its aggregate); reset scalars.
+        return _replace(
+            s, b=s.e, a=s.e, r=s.e, l=s.e,
+            agg_ra=m.identity(), agg_b=m.identity(),
+        )
+
+    def non_singleton(s: DabaLiteState) -> DabaLiteState:
+        def flip(s: DabaLiteState) -> DabaLiteState:
+            # l_F → l_L (already right-aggregated to B = new R's right end),
+            # l_B → l_R (raw values, as l_R requires).  aggRA inherits aggB.
+            return _replace(
+                s, l=s.f, a=s.e, b=s.e,
+                agg_ra=s.agg_b, agg_b=m.identity(),
+            )
+
+        s = lazy_cond(s.l == s.b, flip, lambda s: s, s)
+
+        def shift(s: DabaLiteState) -> DabaLiteState:
+            # L = R = A: slide the (empty) inner sublists right by one.
+            # aggRA needs no update: it is only read when L ≠ R.
+            return _replace(s, a=s.a + 1, r=s.r + 1, l=s.l + 1)
+
+        def shrink(s: DabaLiteState) -> DabaLiteState:
+            # *L ← Π_L ⊗ aggRA  — top of l_L joins the front portion;
+            # aggRA = product of l_R ∪ l_A = v_R ⊗ … ⊗ v_{B-1}.
+            new_l = m.combine(_pi_l(m, s), s.agg_ra)  # 1 ⊗
+            deque = ring_set(s.deque, s.l, new_l, s.capacity)
+            s = _replace(s, deque=deque, l=s.l + 1)
+            # *(A-1) ← *(A-1) ⊗ Π_A — the raw value v_{A-1} (top of l_R)
+            # becomes the new head of the accumulator l_A.
+            raw = ring_get(s.deque, s.a - 1, s.capacity)
+            new_a = m.combine(raw, _pi_a(m, s))  # 1 ⊗
+            deque = ring_set(s.deque, s.a - 1, new_a, s.capacity)
+            # l_R ∪ l_A occupies the same elements, so aggRA is unchanged.
+            return _replace(s, deque=deque, a=s.a - 1)
+
+        return lazy_cond(s.l == s.r, shift, shrink, s)
+
+    return lazy_cond(s.f == s.b, singleton, non_singleton, s)
+
+
+def insert(monoid: Monoid, state: DabaLiteState, value) -> DabaLiteState:
+    v = monoid.lift(value)
+    s = _replace(
+        state,
+        deque=ring_set(state.deque, state.e, v, state.capacity),
+        agg_b=monoid.combine(state.agg_b, v),  # 1 ⊗-invocation
+        e=state.e + 1,
+    )
+    return _fixup(monoid, s)
+
+
+def evict(monoid: Monoid, state: DabaLiteState) -> DabaLiteState:
+    s = _replace(state, f=state.f + 1)
+    return _fixup(monoid, s)

@@ -1,0 +1,120 @@
+"""FlatFIT [Shein et al., SSDBM'17] — the paper's §7 comparison algorithm.
+
+A flat circular buffer of n partial aggregates plus an index array ``nxt``:
+slot i stores an aggregate covering window positions [i, nxt[i]).  A query
+walks the index chain from the front to the tail, combining the per-range
+aggregates, then *path-compresses*: every visited slot is rewritten to hold
+the aggregate from itself to the tail (and its index points to the tail), so
+repeated queries are cheap.  Amortized O(1) ⊗-invocations per operation,
+worst-case O(n) — like Two-Stacks, it trades worst-case latency for
+simplicity; the paper (and our benchmarks) use it as an amortized baseline.
+
+Notes on this implementation:
+  * the traversal is data-dependent pointer chasing, so (exactly as DESIGN.md
+    §2.1 argues) it does not vectorize: this module is EAGER-only, used by
+    the correctness tests and the latency benchmark, not by jitted paths.
+  * queries mutate the structure (compression).  The module therefore offers
+    ``query_mut(monoid, state) -> (agg, state)`` alongside the protocol's
+    pure ``query`` (which traverses without compressing — same result, no
+    amortization credit).
+  * following the paper's §7 adaptation, the buffer is treated as resizable
+    via the standard doubling technique at the host layer; within one
+    capacity the pointer structure is undisturbed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import alloc_ring, i32
+
+PyTree = object
+
+
+@dataclasses.dataclass
+class FlatFitState:
+    """Eager mutable state (not a pytree — FlatFIT is host-side by design)."""
+
+    aggs: list  # per-slot partial aggregate (python list of pytrees)
+    nxt: list  # per-slot index chain
+    head: int
+    tail: int  # next write position
+    size: int
+    capacity: int
+
+
+def init(monoid: Monoid, capacity: int) -> FlatFitState:
+    ident = monoid.identity()
+    return FlatFitState(
+        aggs=[ident for _ in range(capacity)],
+        nxt=[(i + 1) % capacity for i in range(capacity)],
+        head=0,
+        tail=0,
+        size=0,
+        capacity=capacity,
+    )
+
+
+def size(state: FlatFitState) -> int:
+    return state.size
+
+
+def insert(monoid: Monoid, state: FlatFitState, value) -> FlatFitState:
+    if state.size >= state.capacity - 1:
+        raise ValueError("FlatFIT buffer full (host layer should resize)")
+    t = state.tail
+    state.aggs[t] = monoid.lift(value)
+    state.nxt[t] = (t + 1) % state.capacity
+    state.tail = (t + 1) % state.capacity
+    state.size += 1
+    return state
+
+
+def evict(monoid: Monoid, state: FlatFitState) -> FlatFitState:
+    if state.size == 0:
+        return state
+    state.head = (state.head + 1) % state.capacity
+    state.size -= 1
+    return state
+
+
+def _traverse(monoid: Monoid, state: FlatFitState):
+    """Walk head → tail; returns (agg, visited indices in walk order)."""
+    acc = monoid.identity()
+    visited = []
+    i = state.head
+    while i != state.tail:
+        visited.append(i)
+        acc = monoid.combine(acc, state.aggs[i])
+        i = state.nxt[i]
+    return acc, visited
+
+
+def query(monoid: Monoid, state: FlatFitState):
+    """Protocol-pure query (no compression)."""
+    acc, _ = _traverse(monoid, state)
+    return acc
+
+
+def query_mut(monoid: Monoid, state: FlatFitState):
+    """The real FlatFIT query: combine along the chain, then rewrite every
+    visited slot to hold its suffix-to-tail aggregate (path compression)."""
+    if state.size == 0:
+        return monoid.identity(), state
+    # walk and stack the visited prefix aggregates
+    stack = []
+    i = state.head
+    while i != state.tail:
+        stack.append(i)
+        i = state.nxt[i]
+    # suffix-combine in reverse, rewriting slots (the paper's index stack)
+    suffix = monoid.identity()
+    for j in reversed(stack):
+        suffix = monoid.combine(state.aggs[j], suffix)
+        state.aggs[j] = suffix
+        state.nxt[j] = state.tail
+    return suffix, state

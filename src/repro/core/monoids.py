@@ -1,0 +1,593 @@
+"""Monoid framework for sliding-window aggregation (paper §2.2).
+
+A monoid is ``(S, combine, identity)`` with ``combine`` associative and
+``identity`` a two-sided unit.  Following the paper's lift/combine/lower
+framework [Tangwongsan et al. 2015], an aggregation is specified by three
+functions over three types ``In -> Agg -> Out``:
+
+  * ``lift(e: In) -> Agg``       — applied once on arrival,
+  * ``combine(a: Agg, b: Agg)``  — the monoid operator (infix ``⊗``),
+  * ``lower(v: Agg) -> Out``     — applied to query results.
+
+``Agg`` elements are arbitrary JAX pytrees with static structure and shapes,
+so they can live inside ring buffers, be vmapped, sharded, and carried through
+``lax`` control flow.  ``combine`` must NOT assume commutativity: the SWAG
+algorithms always pass the *older* operand on the left.
+
+Monoids are plain (static) Python objects, not pytrees — they hold functions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Monoid:
+    """An aggregation monoid with the paper's lift/combine/lower framework.
+
+    Attributes:
+      name: identifier used in registries / benchmarks.
+      identity: () -> Agg, the unit element ``1``.
+      combine: (Agg, Agg) -> Agg, associative; older operand first.
+      lift: (In) -> Agg.
+      lower: (Agg) -> Out.
+      commutative: algebraic property (Table 1 of the paper).
+      invertible: True iff ``inverse_front`` is available.
+      inverse_front: (Agg, Agg) -> Agg.  ``inverse_front(agg, oldest)``
+        removes the *front* element from a window aggregate:
+        ``inverse_front(lift(e0) ⊗ r, lift(e0)) == r``.  Only defined for
+        invertible monoids (used by the subtract-on-evict baseline).
+    """
+
+    name: str
+    identity: Callable[[], PyTree]
+    combine: Callable[[PyTree, PyTree], PyTree]
+    lift: Callable[[Any], PyTree]
+    lower: Callable[[PyTree], Any]
+    commutative: bool = False
+    invertible: bool = False
+    inverse_front: Optional[Callable[[PyTree, PyTree], PyTree]] = None
+
+    def __repr__(self) -> str:  # keep pytest parametrize ids short
+        return f"Monoid({self.name})"
+
+
+def counting(monoid: Monoid):
+    """Wrap ``monoid`` so every ``combine`` invocation bumps a Python counter.
+
+    Only meaningful in eager (non-traced) execution, where our SWAG
+    implementations execute exactly the branch the paper's pseudocode would.
+    Returns ``(wrapped_monoid, counter)`` where ``counter.count`` is the
+    number of ⊗-invocations so far and ``counter.reset()`` zeroes it.
+    """
+
+    class _Counter:
+        count = 0
+
+        def reset(self):
+            self.count = 0
+
+    counter = _Counter()
+
+    def combine(a, b):
+        counter.count += 1
+        return monoid.combine(a, b)
+
+    def inverse_front(agg, oldest):
+        counter.count += 1
+        return monoid.inverse_front(agg, oldest)
+
+    wrapped = dataclasses.replace(
+        monoid,
+        name=monoid.name + "#counted",
+        combine=combine,
+        inverse_front=inverse_front if monoid.invertible else None,
+    )
+    return wrapped, counter
+
+
+# ---------------------------------------------------------------------------
+# Sum-like monoids (invertible, commutative — Table 1 row 1)
+# ---------------------------------------------------------------------------
+
+
+def sum_monoid(dtype=jnp.float32) -> Monoid:
+    zero = functools.partial(jnp.zeros, (), dtype)
+    return Monoid(
+        name=f"sum_{jnp.dtype(dtype).name}",
+        identity=zero,
+        combine=lambda a, b: a + b,
+        lift=lambda e: jnp.asarray(e, dtype),
+        lower=lambda v: v,
+        commutative=True,
+        invertible=True,
+        inverse_front=lambda agg, oldest: agg - oldest,
+    )
+
+
+def count_monoid(dtype=jnp.int32) -> Monoid:
+    return Monoid(
+        name="count",
+        identity=functools.partial(jnp.zeros, (), dtype),
+        combine=lambda a, b: a + b,
+        lift=lambda e: jnp.ones((), dtype),
+        lower=lambda v: v,
+        commutative=True,
+        invertible=True,
+        inverse_front=lambda agg, oldest: agg - oldest,
+    )
+
+
+def mean_monoid(dtype=jnp.float32) -> Monoid:
+    """Arithmetic mean as a (sum, count) pair monoid."""
+
+    def identity():
+        return {"s": jnp.zeros((), dtype), "n": jnp.zeros((), jnp.int32)}
+
+    return Monoid(
+        name="mean",
+        identity=identity,
+        combine=lambda a, b: {"s": a["s"] + b["s"], "n": a["n"] + b["n"]},
+        lift=lambda e: {"s": jnp.asarray(e, dtype), "n": jnp.ones((), jnp.int32)},
+        lower=lambda v: v["s"] / jnp.maximum(v["n"], 1).astype(dtype),
+        commutative=True,
+        invertible=True,
+        inverse_front=lambda agg, old: {"s": agg["s"] - old["s"], "n": agg["n"] - old["n"]},
+    )
+
+
+def geomean_monoid(dtype=jnp.float32) -> Monoid:
+    """Geometric mean — the paper's medium-cost operator (§7): log-sum + count."""
+
+    def identity():
+        return {"ls": jnp.zeros((), dtype), "n": jnp.zeros((), jnp.int32)}
+
+    return Monoid(
+        name="geomean",
+        identity=identity,
+        combine=lambda a, b: {"ls": a["ls"] + b["ls"], "n": a["n"] + b["n"]},
+        lift=lambda e: {"ls": jnp.log(jnp.asarray(e, dtype)), "n": jnp.ones((), jnp.int32)},
+        lower=lambda v: jnp.exp(v["ls"] / jnp.maximum(v["n"], 1).astype(dtype)),
+        commutative=True,
+        invertible=True,
+        inverse_front=lambda agg, old: {"ls": agg["ls"] - old["ls"], "n": agg["n"] - old["n"]},
+    )
+
+
+def variance_monoid(dtype=jnp.float32) -> Monoid:
+    """Welford/Chan parallel-merge variance: (n, mean, M2) — associative."""
+
+    def identity():
+        return {
+            "n": jnp.zeros((), dtype),
+            "mu": jnp.zeros((), dtype),
+            "m2": jnp.zeros((), dtype),
+        }
+
+    def combine(a, b):
+        n = a["n"] + b["n"]
+        safe_n = jnp.maximum(n, 1.0)
+        delta = b["mu"] - a["mu"]
+        mu = a["mu"] + delta * b["n"] / safe_n
+        m2 = a["m2"] + b["m2"] + delta * delta * a["n"] * b["n"] / safe_n
+        # Merging with the identity (n == 0) must be exact:
+        mu = jnp.where(a["n"] == 0, b["mu"], jnp.where(b["n"] == 0, a["mu"], mu))
+        return {"n": n, "mu": mu, "m2": m2}
+
+    return Monoid(
+        name="variance",
+        identity=identity,
+        combine=combine,
+        lift=lambda e: {
+            "n": jnp.ones((), dtype),
+            "mu": jnp.asarray(e, dtype),
+            "m2": jnp.zeros((), dtype),
+        },
+        lower=lambda v: v["m2"] / jnp.maximum(v["n"], 1.0),
+        commutative=True,
+        invertible=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Max-like monoids (non-invertible — Table 1 row 2)
+# ---------------------------------------------------------------------------
+
+
+def max_monoid(dtype=jnp.float32) -> Monoid:
+    neg_inf = jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).min
+    return Monoid(
+        name=f"max_{jnp.dtype(dtype).name}",
+        identity=lambda: jnp.full((), neg_inf, dtype),
+        combine=jnp.maximum,
+        lift=lambda e: jnp.asarray(e, dtype),
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+def min_monoid(dtype=jnp.float32) -> Monoid:
+    pos_inf = jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
+    return Monoid(
+        name=f"min_{jnp.dtype(dtype).name}",
+        identity=lambda: jnp.full((), pos_inf, dtype),
+        combine=jnp.minimum,
+        lift=lambda e: jnp.asarray(e, dtype),
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+def maxcount_monoid(dtype=jnp.float32) -> Monoid:
+    """The paper's running example (§2.2): count of occurrences of the max."""
+
+    def identity():
+        neg_inf = jnp.finfo(dtype).min
+        return {"m": jnp.full((), neg_inf, dtype), "c": jnp.zeros((), jnp.int32)}
+
+    def combine(a, b):
+        gt = a["m"] > b["m"]
+        lt = a["m"] < b["m"]
+        m = jnp.maximum(a["m"], b["m"])
+        c = jnp.where(gt, a["c"], jnp.where(lt, b["c"], a["c"] + b["c"]))
+        return {"m": m, "c": c}
+
+    return Monoid(
+        name="maxcount",
+        identity=identity,
+        combine=combine,
+        lift=lambda e: {"m": jnp.asarray(e, dtype), "c": jnp.ones((), jnp.int32)},
+        lower=lambda v: v["c"],
+        commutative=True,
+        invertible=False,
+    )
+
+
+def argmax_monoid(dtype=jnp.float32) -> Monoid:
+    """argMax with earliest-position tie-break — NON-commutative.
+
+    ``lift`` takes ``(value, position)``.  Ties keep the *left* (older)
+    operand, so operand order matters: a genuine non-commutative monoid for
+    exercising the SWAG algorithms' ordering discipline.
+    """
+
+    def identity():
+        neg_inf = jnp.finfo(dtype).min
+        return {"m": jnp.full((), neg_inf, dtype), "i": jnp.full((), -1, jnp.int32)}
+
+    def combine(a, b):
+        keep_a = a["m"] >= b["m"]  # tie -> older (left) wins
+        return {
+            "m": jnp.where(keep_a, a["m"], b["m"]),
+            "i": jnp.where(keep_a, a["i"], b["i"]),
+        }
+
+    def lift(e):
+        v, pos = e
+        return {"m": jnp.asarray(v, dtype), "i": jnp.asarray(pos, jnp.int32)}
+
+    return Monoid(
+        name="argmax",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lambda v: v["i"],
+        commutative=False,
+        invertible=False,
+    )
+
+
+def m4_monoid(dtype=jnp.float32) -> Monoid:
+    """M4 aggregation [Jugel et al.]: (min, max, first, last) — NON-commutative.
+
+    ``first``/``last`` depend on operand order.  ``n`` tracks emptiness so the
+    identity behaves as a true unit.
+    """
+
+    def identity():
+        return {
+            "min": jnp.full((), jnp.finfo(dtype).max, dtype),
+            "max": jnp.full((), jnp.finfo(dtype).min, dtype),
+            "first": jnp.zeros((), dtype),
+            "last": jnp.zeros((), dtype),
+            "n": jnp.zeros((), jnp.int32),
+        }
+
+    def combine(a, b):
+        a_empty = a["n"] == 0
+        b_empty = b["n"] == 0
+        return {
+            "min": jnp.minimum(a["min"], b["min"]),
+            "max": jnp.maximum(a["max"], b["max"]),
+            "first": jnp.where(a_empty, b["first"], a["first"]),
+            "last": jnp.where(b_empty, a["last"], b["last"]),
+            "n": a["n"] + b["n"],
+        }
+
+    def lift(e):
+        v = jnp.asarray(e, dtype)
+        return {"min": v, "max": v, "first": v, "last": v, "n": jnp.ones((), jnp.int32)}
+
+    return Monoid(
+        name="m4",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lambda v: jnp.stack([v["min"], v["max"], v["first"], v["last"]]),
+        commutative=False,
+        invertible=False,
+    )
+
+
+def logsumexp_monoid(dtype=jnp.float32) -> Monoid:
+    """Numerically-stable streaming logsumexp (softmax denominators)."""
+
+    neg_inf = jnp.finfo(dtype).min
+
+    def combine(a, b):
+        m = jnp.maximum(a, b)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        out = m_safe + jnp.log(
+            jnp.exp(a - m_safe) + jnp.exp(b - m_safe)
+        )
+        return jnp.where(m <= neg_inf / 2, m, out).astype(dtype)
+
+    return Monoid(
+        name="logsumexp",
+        identity=lambda: jnp.full((), neg_inf, dtype),
+        combine=combine,
+        lift=lambda e: jnp.asarray(e, dtype),
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mergeable sketches (non-invertible, commutative — Table 1 row 3)
+# ---------------------------------------------------------------------------
+
+_HASH_PRIMES = np.array(
+    [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1, 0xFD7046C5],
+    dtype=np.uint32,
+)
+
+
+def _hash_u32(x: jax.Array, seed: int) -> jax.Array:
+    """Cheap xorshift-multiply hash on uint32 lanes (vectorized)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(_HASH_PRIMES[seed % len(_HASH_PRIMES)])
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bloom_monoid(num_words: int = 64, num_hashes: int = 4) -> Monoid:
+    """Bloom filter — the paper's expensive operator (§7).
+
+    Agg = uint32[num_words] bit array; combine = bitwise OR (non-invertible).
+    ``num_words * 32`` bits total.  Use :func:`bloom_contains` on a query
+    result for membership tests.
+    """
+
+    nbits = num_words * 32
+
+    def lift(e):
+        e = jnp.asarray(e)
+        filt = jnp.zeros((num_words,), jnp.uint32)
+        for k in range(num_hashes):
+            h = _hash_u32(e, k) % nbits
+            word, bit = h // 32, h % 32
+            filt = filt.at[word].set(filt[word] | (jnp.uint32(1) << bit))
+        return filt
+
+    return Monoid(
+        name=f"bloom{nbits}",
+        identity=lambda: jnp.zeros((num_words,), jnp.uint32),
+        combine=jnp.bitwise_or,
+        lift=lift,
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+def bloom_contains(filt: jax.Array, e, num_hashes: int = 4) -> jax.Array:
+    nbits = filt.shape[-1] * 32
+    hit = jnp.array(True)
+    for k in range(num_hashes):
+        h = _hash_u32(jnp.asarray(e), k) % nbits
+        word, bit = h // 32, h % 32
+        hit = hit & ((filt[..., word] >> bit) & 1).astype(bool)
+    return hit
+
+
+def countmin_monoid(rows: int = 4, width: int = 64) -> Monoid:
+    """Count-min sketch; merge = elementwise add.  Estimate via
+    :func:`countmin_estimate`.  (Merge is formally invertible but the
+    estimate is not — we expose it as invertible for subtract-on-evict.)"""
+
+    def lift(e):
+        e = jnp.asarray(e)
+        sk = jnp.zeros((rows, width), jnp.int32)
+        for r in range(rows):
+            col = _hash_u32(e, r) % width
+            sk = sk.at[r, col].add(1)
+        return sk
+
+    return Monoid(
+        name=f"countmin{rows}x{width}",
+        identity=lambda: jnp.zeros((rows, width), jnp.int32),
+        combine=lambda a, b: a + b,
+        lift=lift,
+        lower=lambda v: v,
+        commutative=True,
+        invertible=True,
+        inverse_front=lambda agg, old: agg - old,
+    )
+
+
+def countmin_estimate(sketch: jax.Array, e) -> jax.Array:
+    rows, width = sketch.shape[-2:]
+    vals = []
+    for r in range(rows):
+        col = _hash_u32(jnp.asarray(e), r) % width
+        vals.append(sketch[..., r, col])
+    return jnp.min(jnp.stack(vals, -1), -1)
+
+
+def hll_monoid(num_registers: int = 64) -> Monoid:
+    """HyperLogLog-style register-max sketch; combine = elementwise max."""
+
+    def lift(e):
+        h = _hash_u32(jnp.asarray(e), 0)
+        reg = (h % num_registers).astype(jnp.int32)
+        # rank = leading-zero count of the remaining bits, +1
+        rest = _hash_u32(jnp.asarray(e), 1)
+        rank = 32 - jnp.floor(jnp.log2(rest.astype(jnp.float32) + 2.0)).astype(jnp.int32) + 1
+        regs = jnp.zeros((num_registers,), jnp.int32)
+        return regs.at[reg].set(rank)
+
+    return Monoid(
+        name=f"hll{num_registers}",
+        identity=lambda: jnp.zeros((num_registers,), jnp.int32),
+        combine=jnp.maximum,
+        lift=lift,
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Non-commutative, non-invertible monoids for systems integration & testing
+# ---------------------------------------------------------------------------
+
+
+def affine_monoid(state_shape: tuple, dtype=jnp.float32) -> Monoid:
+    """Composition of affine state maps ``s ↦ d ⊙ s + u`` (SSM/RWKV windows).
+
+    An element represents the map ``s ↦ d*s + u`` with per-channel decay ``d``
+    (shape ``state_shape``) and update ``u`` (same shape).  Composition with
+    the OLDER map applied first:
+
+        (d_a, u_a) ⊗ (d_b, u_b)  =  (d_a*d_b, d_b*u_a + u_b)
+
+    Associative ✓, non-commutative ✓, non-invertible when any decay is 0 —
+    exactly the monoid class DABA exists for.  ``query`` of a window of maps
+    applied to a zero initial state yields the *windowed* SSM state: an
+    evicting, exact sliding-window recurrence in O(1) worst-case combines per
+    token (see core/windowed_state.py).
+    """
+
+    def identity():
+        return {"d": jnp.ones(state_shape, dtype), "u": jnp.zeros(state_shape, dtype)}
+
+    def combine(a, b):
+        return {"d": a["d"] * b["d"], "u": b["d"] * a["u"] + b["u"]}
+
+    def lift(e):
+        return {"d": jnp.asarray(e["d"], dtype), "u": jnp.asarray(e["u"], dtype)}
+
+    return Monoid(
+        name=f"affine{state_shape}",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lambda v: v["u"],  # map applied to s0 = 0
+        commutative=False,
+        invertible=False,
+    )
+
+
+def affine_int_monoid() -> Monoid:
+    """Exact-arithmetic affine monoid over Z/2^32 (wraparound int32).
+
+    Exactly associative (no floating-point error), non-commutative and
+    non-invertible (a = 0 kills information) — the reference monoid for
+    hypothesis property tests where bit-exact oracle equality is asserted.
+    lift takes a pair ``(a, b)`` of ints.
+    """
+
+    def identity():
+        return {"a": jnp.ones((), jnp.int32), "b": jnp.zeros((), jnp.int32)}
+
+    def combine(x, y):
+        return {"a": x["a"] * y["a"], "b": y["a"] * x["b"] + y["b"]}
+
+    def lift(e):
+        a, b = e
+        return {"a": jnp.asarray(a, jnp.int32), "b": jnp.asarray(b, jnp.int32)}
+
+    return Monoid(
+        name="affine_i32",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lambda v: v["b"],
+        commutative=False,
+        invertible=False,
+    )
+
+
+def matrix_monoid(k: int = 2, dtype=jnp.float32) -> Monoid:
+    """k×k matrix product monoid — non-commutative, generally non-invertible."""
+
+    return Monoid(
+        name=f"mat{k}x{k}",
+        identity=lambda: jnp.eye(k, dtype=dtype),
+        combine=lambda a, b: a @ b,
+        lift=lambda e: jnp.asarray(e, dtype).reshape(k, k),
+        lower=lambda v: v,
+        commutative=False,
+        invertible=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Monoid]] = {
+    "sum": sum_monoid,
+    "sum_i64": functools.partial(sum_monoid, jnp.int64),
+    "count": count_monoid,
+    "mean": mean_monoid,
+    "geomean": geomean_monoid,
+    "variance": variance_monoid,
+    "max": max_monoid,
+    "max_i32": functools.partial(max_monoid, jnp.int32),
+    "min": min_monoid,
+    "maxcount": maxcount_monoid,
+    "argmax": argmax_monoid,
+    "m4": m4_monoid,
+    "logsumexp": logsumexp_monoid,
+    "bloom": bloom_monoid,
+    "countmin": countmin_monoid,
+    "hll": hll_monoid,
+    "affine_i32": affine_int_monoid,
+    "mat2x2": matrix_monoid,
+}
+
+
+def get_monoid(name: str, **kwargs) -> Monoid:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown monoid {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_monoids() -> list[str]:
+    return sorted(_REGISTRY)

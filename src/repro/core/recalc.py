@@ -1,0 +1,63 @@
+"""Recalculate-from-scratch baseline (paper §8.1).
+
+Maintains a FIFO ring of lifted values; ``query`` folds the whole window:
+O(n) ⊗-invocations per query, O(1) per insert/evict.  Space: n partial
+aggregates.  This is also the *oracle* used by the property tests — its
+correctness is immediate from the ADT definition.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import (
+    alloc_ring,
+    i32,
+    lazy_fori,
+    ring_get,
+    ring_set,
+    swag_state,
+)
+
+
+@swag_state
+class RecalcState:
+    buf: object  # ring of lifted values
+    front: jax.Array  # logical pointer, int32
+    end: jax.Array
+    capacity: int
+
+
+def init(monoid: Monoid, capacity: int) -> RecalcState:
+    return RecalcState(
+        buf=alloc_ring(monoid, capacity), front=i32(0), end=i32(0), capacity=capacity
+    )
+
+
+def size(state: RecalcState):
+    return state.end - state.front
+
+
+def insert(monoid: Monoid, state: RecalcState, value) -> RecalcState:
+    v = monoid.lift(value)
+    buf = ring_set(state.buf, state.end, v, state.capacity)
+    return RecalcState(
+        buf=buf, front=state.front, end=state.end + 1, capacity=state.capacity
+    )
+
+
+def evict(monoid: Monoid, state: RecalcState) -> RecalcState:
+    return RecalcState(
+        buf=state.buf,
+        front=state.front + 1,
+        end=state.end,
+        capacity=state.capacity,
+    )
+
+
+def query(monoid: Monoid, state: RecalcState):
+    def body(i, acc):
+        return monoid.combine(acc, ring_get(state.buf, state.front + i, state.capacity))
+
+    return lazy_fori(0, state.end - state.front, body, monoid.identity())

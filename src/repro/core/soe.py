@@ -1,0 +1,66 @@
+"""Subtract-on-evict baseline (paper §8.3) — invertible monoids ONLY.
+
+Keeps a running aggregate plus a FIFO ring of lifted values (needed to know
+*what* to subtract).  O(1) ⊗/inverse invocations per op, but requires a left
+inverse — precisely the property the paper's algorithms do away with.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import alloc_ring, i32, ring_get, ring_set, swag_state
+
+
+@swag_state
+class SoeState:
+    buf: object
+    agg: object
+    front: jax.Array
+    end: jax.Array
+    capacity: int
+
+
+def init(monoid: Monoid, capacity: int) -> SoeState:
+    if not monoid.invertible:
+        raise ValueError(
+            f"subtract-on-evict requires an invertible monoid, got {monoid.name}"
+        )
+    return SoeState(
+        buf=alloc_ring(monoid, capacity),
+        agg=monoid.identity(),
+        front=i32(0),
+        end=i32(0),
+        capacity=capacity,
+    )
+
+
+def size(state: SoeState):
+    return state.end - state.front
+
+
+def insert(monoid: Monoid, state: SoeState, value) -> SoeState:
+    v = monoid.lift(value)
+    return SoeState(
+        buf=ring_set(state.buf, state.end, v, state.capacity),
+        agg=monoid.combine(state.agg, v),
+        front=state.front,
+        end=state.end + 1,
+        capacity=state.capacity,
+    )
+
+
+def evict(monoid: Monoid, state: SoeState) -> SoeState:
+    oldest = ring_get(state.buf, state.front, state.capacity)
+    return SoeState(
+        buf=state.buf,
+        agg=monoid.inverse_front(state.agg, oldest),
+        front=state.front + 1,
+        end=state.end,
+        capacity=state.capacity,
+    )
+
+
+def query(monoid: Monoid, state: SoeState):
+    return state.agg

@@ -1,0 +1,162 @@
+"""Shared machinery for the SWAG (sliding-window aggregation) algorithms.
+
+Every algorithm in :mod:`repro.core` is a *functional* state machine:
+
+    state = algo.init(monoid, capacity)
+    state = algo.insert(monoid, state, element)     # element: In type
+    state = algo.evict(monoid, state)
+    agg   = algo.query(monoid, state)               # Agg type (pre-lower)
+
+States are registered pytrees (ring buffers + int32 pointers), so they can be
+``jit``-ted, ``vmap``-ped across independent windows, ``scan``-ned over
+streams, sharded with ``pjit``, and checkpointed like any other model state.
+
+Control flow uses :func:`lazy_cond`, which executes only the taken branch in
+eager mode (matching the paper's pseudocode exactly — this is what makes the
+combine-count theorems directly testable) and lowers to ``lax.cond`` under
+tracing (where vmap turns it into ``select``; see DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monoids import Monoid
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Control flow
+# ---------------------------------------------------------------------------
+
+
+def lazy_cond(pred, true_fn: Callable, false_fn: Callable, *operands):
+    """``lax.cond`` that short-circuits when ``pred`` is concrete.
+
+    In eager execution the paper's sequential semantics (only the taken branch
+    runs, so ⊗-counts match the theorems).  Under ``jit``/``vmap`` this is a
+    regular ``lax.cond`` (both branches traced; vmap executes both and
+    selects — constant, uniform work per lane: the SIMD story of DESIGN.md).
+    """
+    try:
+        concrete = bool(pred)
+    except (jax.errors.TracerBoolConversionError, jax.errors.ConcretizationTypeError):
+        return jax.lax.cond(pred, true_fn, false_fn, *operands)
+    return true_fn(*operands) if concrete else false_fn(*operands)
+
+
+def lazy_fori(lo, hi, body: Callable, init):
+    """``lax.fori_loop`` that runs a Python loop when bounds are concrete."""
+    try:
+        lo_c, hi_c = int(lo), int(hi)
+    except (jax.errors.TracerBoolConversionError, jax.errors.ConcretizationTypeError, TypeError):
+        return jax.lax.fori_loop(lo, hi, body, init)
+    carry = init
+    for i in range(lo_c, hi_c):
+        carry = body(i, carry)
+    return carry
+
+
+# ---------------------------------------------------------------------------
+# Ring buffers of monoid elements
+# ---------------------------------------------------------------------------
+
+
+def alloc_ring(monoid: Monoid, capacity: int) -> PyTree:
+    """Allocate a ring buffer of ``capacity`` Agg elements, filled with 1."""
+    ident = monoid.identity()
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (capacity,) + x.shape).copy(), ident
+    )
+
+
+def ring_get(buf: PyTree, ptr, capacity: int) -> PyTree:
+    """Read the element at logical pointer ``ptr`` (physical ``ptr % cap``)."""
+    idx = jnp.asarray(ptr, jnp.int32) % capacity
+    return jax.tree.map(lambda a: a[idx], buf)
+
+
+def ring_set(buf: PyTree, ptr, elem: PyTree, capacity: int) -> PyTree:
+    idx = jnp.asarray(ptr, jnp.int32) % capacity
+    return jax.tree.map(lambda a, e: a.at[idx].set(e), buf, elem)
+
+
+def i32(x) -> jax.Array:
+    return jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# State dataclass registration helper
+# ---------------------------------------------------------------------------
+
+
+def swag_state(cls):
+    """Decorator: freeze + register a SWAG state dataclass as a JAX pytree.
+
+    All fields are dynamic (pytree children) except fields whose name is
+    ``capacity`` (static metadata).
+    """
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    fields = [f.name for f in dataclasses.fields(cls)]
+    data_fields = [f for f in fields if f != "capacity"]
+    meta_fields = [f for f in fields if f == "capacity"]
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=data_fields, meta_fields=meta_fields
+    )
+
+
+# ---------------------------------------------------------------------------
+# Facade
+# ---------------------------------------------------------------------------
+
+
+class SWAG:
+    """Object-style facade binding (algorithm module, monoid, capacity).
+
+    ``algo`` is any module exposing ``init/insert/evict/query/size`` with the
+    functional signatures documented above.  With ``use_jit=True`` the three
+    operations are jitted (donating the state argument); eager otherwise.
+    """
+
+    def __init__(self, algo, monoid: Monoid, capacity: int, use_jit: bool = False):
+        self.algo = algo
+        self.monoid = monoid
+        self.capacity = capacity
+        self._state = algo.init(monoid, capacity)
+        if use_jit:
+            self._insert = jax.jit(
+                lambda s, v: algo.insert(monoid, s, v), donate_argnums=(0,)
+            )
+            self._evict = jax.jit(lambda s: algo.evict(monoid, s), donate_argnums=(0,))
+            self._query = jax.jit(lambda s: algo.query(monoid, s))
+        else:
+            self._insert = lambda s, v: algo.insert(monoid, s, v)
+            self._evict = lambda s: algo.evict(monoid, s)
+            self._query = lambda s: algo.query(monoid, s)
+
+    @property
+    def state(self):
+        return self._state
+
+    def insert(self, v) -> None:
+        self._state = self._insert(self._state, v)
+
+    def evict(self) -> None:
+        self._state = self._evict(self._state)
+
+    def query(self):
+        return self._query(self._state)
+
+    def lowered_query(self):
+        return self.monoid.lower(self.query())
+
+    def size(self) -> int:
+        return int(self.algo.size(self._state))
+
+    def __len__(self) -> int:
+        return self.size()

@@ -1,0 +1,152 @@
+"""Two-Stacks (paper §3): amortized O(1), worst-case O(n) SWAG.
+
+A FIFO queue as two stacks, augmented with aggregation.  The front stack F
+aggregates toward its top (= oldest element, easy eviction); the back stack B
+aggregates toward its top (= newest element, easy insertion).  When F runs
+empty, ``evict`` first performs a *flip*: pop everything from B, pushing onto
+F while reversing the aggregation direction — the O(n) latency spike DABA
+exists to remove.
+
+Each stack element is a (val, agg) struct (paper Fig. 1): total space 2n
+partial aggregates.  Stacks are fixed-capacity arrays with a size scalar
+(stack tops never wrap, no ring arithmetic needed).
+
+Under ``vmap``, the flip's data-dependent loop becomes a ``while_loop`` whose
+trip count is the max over lanes: one lane's flip stalls the whole batch.
+This is measurable in benchmarks/bench_batched.py and is the SIMD-level
+restatement of the paper's latency argument (DESIGN.md §2.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import alloc_ring, i32, lazy_cond, lazy_fori, swag_state
+
+PyTree = object
+
+
+def _get(buf, idx):
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda a: a[idx], buf)
+
+
+def _set(buf, idx, elem):
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda a, e: a.at[idx].set(e), buf, elem)
+
+
+@swag_state
+class TwoStacksState:
+    f_vals: PyTree
+    f_aggs: PyTree
+    f_size: jax.Array
+    b_vals: PyTree
+    b_aggs: PyTree
+    b_size: jax.Array
+    capacity: int
+
+
+def init(monoid: Monoid, capacity: int) -> TwoStacksState:
+    return TwoStacksState(
+        f_vals=alloc_ring(monoid, capacity),
+        f_aggs=alloc_ring(monoid, capacity),
+        f_size=i32(0),
+        b_vals=alloc_ring(monoid, capacity),
+        b_aggs=alloc_ring(monoid, capacity),
+        b_size=i32(0),
+        capacity=capacity,
+    )
+
+
+def size(state: TwoStacksState):
+    return state.f_size + state.b_size
+
+
+def _pi_f(monoid: Monoid, state: TwoStacksState):
+    """Aggregate of the whole front stack: its top's agg (or 1)."""
+    return lazy_cond(
+        state.f_size == 0,
+        lambda: monoid.identity(),
+        lambda: _get(state.f_aggs, state.f_size - 1),
+    )
+
+
+def _pi_b(monoid: Monoid, state: TwoStacksState):
+    return lazy_cond(
+        state.b_size == 0,
+        lambda: monoid.identity(),
+        lambda: _get(state.b_aggs, state.b_size - 1),
+    )
+
+
+def query(monoid: Monoid, state: TwoStacksState):
+    return monoid.combine(_pi_f(monoid, state), _pi_b(monoid, state))
+
+
+def insert(monoid: Monoid, state: TwoStacksState, value) -> TwoStacksState:
+    v = monoid.lift(value)
+    agg = monoid.combine(_pi_b(monoid, state), v)  # 1 ⊗-invocation
+    return TwoStacksState(
+        f_vals=state.f_vals,
+        f_aggs=state.f_aggs,
+        f_size=state.f_size,
+        b_vals=_set(state.b_vals, state.b_size, v),
+        b_aggs=_set(state.b_aggs, state.b_size, agg),
+        b_size=state.b_size + 1,
+        capacity=state.capacity,
+    )
+
+
+def _flip(monoid: Monoid, state: TwoStacksState) -> TwoStacksState:
+    """Pop all of B, pushing onto F with reversed aggregation direction.
+
+    After the flip, F.top() (at index b_size-1) is the oldest element with
+    agg = v_oldest ⊗ … ⊗ v_newest.  Costs exactly |B| ⊗-invocations, paid for
+    by the banker's-method coins deposited by the preceding insertions.
+    """
+
+    nb = state.b_size
+
+    def body(i, carry):
+        f_vals, f_aggs = carry
+        # Pop order: B's top first (newest), so F is built newest→oldest and
+        # F's final top is the oldest element.
+        src = nb - 1 - i
+        v = _get(state.b_vals, src)
+        prev = lazy_cond(
+            i == 0, lambda: monoid.identity(), lambda: _get(f_aggs, i - 1)
+        )
+        agg = monoid.combine(v, prev)  # older operand LEFT: v is older than prev
+        return _set(f_vals, i, v), _set(f_aggs, i, agg)
+
+    f_vals, f_aggs = lazy_fori(0, nb, body, (state.f_vals, state.f_aggs))
+    return TwoStacksState(
+        f_vals=f_vals,
+        f_aggs=f_aggs,
+        f_size=nb,
+        b_vals=state.b_vals,
+        b_aggs=state.b_aggs,
+        b_size=i32(0),
+        capacity=state.capacity,
+    )
+
+
+def evict(monoid: Monoid, state: TwoStacksState) -> TwoStacksState:
+    state = lazy_cond(
+        state.f_size == 0,
+        lambda s: _flip(monoid, s),
+        lambda s: s,
+        state,
+    )
+    return TwoStacksState(
+        f_vals=state.f_vals,
+        f_aggs=state.f_aggs,
+        f_size=state.f_size - 1,
+        b_vals=state.b_vals,
+        b_aggs=state.b_aggs,
+        b_size=state.b_size,
+        capacity=state.capacity,
+    )

@@ -1,0 +1,117 @@
+"""Two-Stacks Lite (paper §4): amortized O(1), worst-case O(n), n+1 space.
+
+Improvements over Two-Stacks (following Hammer Slide [35]):
+  * none of the front stack's val fields are ever read → store only aggs;
+  * only the back stack's LAST agg is read → keep it in a scalar ``aggB``;
+  * one physical deque (ring buffer) with a virtual boundary pointer B.
+
+Ring layout: logical pointers F ≤ B ≤ E.  ``deque[F..B)`` is the front
+sublist l_F (element i holds v_i ⊗ … ⊗ v_{B-F-1}); ``deque[B..E)`` is the
+back sublist l_B (raw lifted values); ``aggB`` holds the product of l_B.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.monoids import Monoid
+from repro.core.swag_base import (
+    alloc_ring,
+    i32,
+    lazy_cond,
+    lazy_fori,
+    ring_get,
+    ring_set,
+    swag_state,
+)
+
+PyTree = object
+
+
+@swag_state
+class TwoStacksLiteState:
+    deque: PyTree  # ring of partial aggregates
+    agg_b: PyTree  # aggregate of the back sublist
+    f: jax.Array  # logical pointers (monotone int32)
+    b: jax.Array
+    e: jax.Array
+    capacity: int
+
+
+def init(monoid: Monoid, capacity: int) -> TwoStacksLiteState:
+    return TwoStacksLiteState(
+        deque=alloc_ring(monoid, capacity),
+        agg_b=monoid.identity(),
+        f=i32(0),
+        b=i32(0),
+        e=i32(0),
+        capacity=capacity,
+    )
+
+
+def size(state: TwoStacksLiteState):
+    return state.e - state.f
+
+
+def _pi_f(monoid: Monoid, state: TwoStacksLiteState):
+    return lazy_cond(
+        state.f == state.b,
+        lambda: monoid.identity(),
+        lambda: ring_get(state.deque, state.f, state.capacity),
+    )
+
+
+def query(monoid: Monoid, state: TwoStacksLiteState):
+    return monoid.combine(_pi_f(monoid, state), state.agg_b)
+
+
+def insert(monoid: Monoid, state: TwoStacksLiteState, value) -> TwoStacksLiteState:
+    v = monoid.lift(value)
+    return TwoStacksLiteState(
+        deque=ring_set(state.deque, state.e, v, state.capacity),
+        agg_b=monoid.combine(state.agg_b, v),  # 1 ⊗-invocation
+        f=state.f,
+        b=state.b,
+        e=state.e + 1,
+        capacity=state.capacity,
+    )
+
+
+def _flip(monoid: Monoid, state: TwoStacksLiteState) -> TwoStacksLiteState:
+    """In-place suffix combine (paper lines 11–16): deque[i] ← deque[i] ⊗
+    deque[i+1] from right to left, then l_F spans everything and l_B empties.
+    """
+
+    n = state.e - state.f
+
+    def body(k, deque):
+        # k = 0 … n-2 walks I from E-2 down to F.
+        i = state.e - 2 - k
+        cur = ring_get(deque, i, state.capacity)
+        nxt = ring_get(deque, i + 1, state.capacity)
+        return ring_set(deque, i, monoid.combine(cur, nxt), state.capacity)
+
+    deque = lazy_fori(0, n - 1, body, state.deque)
+    return TwoStacksLiteState(
+        deque=deque,
+        agg_b=monoid.identity(),
+        f=state.f,
+        b=state.e,  # front sublist now spans the whole deque
+        e=state.e,
+        capacity=state.capacity,
+    )
+
+
+def evict(monoid: Monoid, state: TwoStacksLiteState) -> TwoStacksLiteState:
+    needs_flip = (state.f == state.b) & (state.b != state.e)
+    state = lazy_cond(
+        needs_flip, lambda s: _flip(monoid, s), lambda s: s, state
+    )
+    return TwoStacksLiteState(
+        deque=state.deque,
+        agg_b=state.agg_b,
+        f=state.f + 1,
+        b=state.b,
+        e=state.e,
+        capacity=state.capacity,
+    )

@@ -1,0 +1,186 @@
+"""Windowed SSM / linear-attention state via DABA Lite (beyond-paper feature).
+
+Gated-linear recurrences (RWKV-6, Mamba-2/SSD, GLA, ...) update a state
+``s_t = d_t ⊙ s_{t-1} + u_t`` where ``d_t`` is a data-dependent decay and
+``u_t`` an outer-product update (kᵀv).  Each token therefore contributes an
+*affine map*; affine maps compose associatively, non-commutatively, and are
+non-invertible when any decay channel underflows to 0 — precisely the monoid
+class the paper targets.
+
+A **sliding window of W tokens** of such a recurrence is the composition of
+the last W affine maps applied to s₀ = 0.  Naively recomputing it costs
+O(W) per token; inverting the decay is numerically catastrophic (divide by
+d ≈ 0).  DABA Lite maintains it *exactly* in worst-case O(1) combines per
+token — an evicting, bounded-context decode state with uniform per-token
+latency.  This powers the ``long_500k`` decode path for rwkv6-1.6b and
+zamba2-1.2b (DESIGN.md §3, §5).
+
+Shapes: the affine element is ``{"d": (H, K, 1), "u": (H, K, V)}`` broadcast
+so that composition is elementwise on decay and a decay-scaled add on state
+(K = key/state dim, V = value dim, H = heads).  For Mamba-2, d is scalar per
+head: shape (H, 1, 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import daba_lite
+from repro.core.monoids import Monoid, affine_monoid
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowedStateCell:
+    """Sliding-window recurrence cell: y_t reads the state of the last W tokens.
+
+    Usage (decode loop, one token per call):
+
+        cell  = WindowedStateCell(heads=H, key_dim=K, value_dim=V, window=W)
+        state = cell.init()
+        state, s_win = cell.update(state, decay, update)   # s_win: (H, K, V)
+
+    ``decay``: (H, K, 1) or broadcastable — per-channel decay d_t in [0, 1].
+    ``update``: (H, K, V) — the additive update u_t (e.g. k_tᵀ v_t).
+    ``s_win`` is EXACTLY sum_{i=t-W+1..t} (prod_{j>i} d_j) u_i — the state a
+    fresh recurrence started W tokens ago would have.  Worst-case 3 combines
+    per token (Theorem 13), independent of W.
+    """
+
+    heads: int
+    key_dim: int
+    value_dim: int
+    window: int
+
+    @property
+    def monoid(self) -> Monoid:
+        base = affine_monoid((self.heads, self.key_dim, self.value_dim))
+
+        # Decay is stored broadcast-shaped (H, K, 1) to avoid materializing a
+        # (H, K, V) decay; combine broadcasts it over the value dim.
+        def identity():
+            return {
+                "d": jnp.ones((self.heads, self.key_dim, 1), jnp.float32),
+                "u": jnp.zeros((self.heads, self.key_dim, self.value_dim), jnp.float32),
+            }
+
+        def combine(a, b):
+            return {"d": a["d"] * b["d"], "u": b["d"] * a["u"] + b["u"]}
+
+        def lift(e):
+            return {"d": e["d"], "u": e["u"]}
+
+        return dataclasses.replace(
+            base, identity=identity, combine=combine, lift=lift,
+            name=f"affine_h{self.heads}k{self.key_dim}v{self.value_dim}",
+        )
+
+    def init(self) -> PyTree:
+        # capacity = window + 1: ring slack for the insert-then-evict step.
+        return daba_lite.init(self.monoid, self.window + 1)
+
+    def update(self, state: PyTree, decay: jax.Array, update: jax.Array):
+        m = self.monoid
+        state = daba_lite.insert(m, state, {"d": decay, "u": update})
+        state = jax.lax.cond(
+            daba_lite.size(state) > self.window,
+            lambda s: daba_lite.evict(m, s),
+            lambda s: s,
+            state,
+        )
+        agg = daba_lite.query(m, state)
+        return state, agg["u"]  # window map applied to s0 = 0
+
+    def prefill(self, state: PyTree, decays: jax.Array, updates: jax.Array):
+        """Scan a (T, …) chunk through the cell; returns (state, (T,H,K,V))."""
+
+        def step(st, du):
+            d, u = du
+            return self.update(st, d, u)
+
+        return jax.lax.scan(step, state, (decays, updates))
+
+
+def reference_windowed_state(decays: jax.Array, updates: jax.Array, window: int):
+    """O(T·W) oracle: for each t, run the recurrence fresh over the last W
+    tokens.  decays: (T, H, K, 1); updates: (T, H, K, V) → (T, H, K, V)."""
+    T = updates.shape[0]
+    outs = []
+    for t in range(T):
+        lo = max(0, t - window + 1)
+        s = jnp.zeros_like(updates[0])
+        for j in range(lo, t + 1):
+            s = decays[j] * s + updates[j]
+        outs.append(s)
+    return jnp.stack(outs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedWindowedStateCell:
+    """Coarse-grained windowed recurrence: DABA Lite over CHUNK aggregates.
+
+    For very long windows (long_500k decode), storing one affine map per
+    token would need W·(H·K·V) floats — the paper's n+2 space bound with a
+    huge element type.  The paper's §8.2 coarse-grained sliding (Scotty-
+    style pre-aggregation) composes: tokens accumulate into a *running
+    chunk map*; every ``chunk`` tokens the completed chunk's map is inserted
+    into a DABA Lite window of ``window_chunks`` elements and the oldest
+    chunk is evicted.  The queryable state covers the last
+    ``window_chunks·chunk ± chunk`` tokens — exact at chunk granularity,
+    worst-case O(1) combines per token (DABA ops only fire at boundaries,
+    and each is itself O(1) — no latency spike at chunk turnover, unlike a
+    Two-Stacks flip which would recompute the whole window).
+    """
+
+    heads: int
+    key_dim: int
+    value_dim: int
+    chunk: int
+    window_chunks: int
+
+    @property
+    def monoid(self) -> Monoid:
+        return WindowedStateCell(
+            self.heads, self.key_dim, self.value_dim, 1
+        ).monoid
+
+    def init(self) -> PyTree:
+        m = self.monoid
+        return {
+            "daba": daba_lite.init(m, self.window_chunks + 1),
+            "partial": m.identity(),  # running (incomplete) chunk map
+            "count": jnp.zeros((), jnp.int32),  # tokens in partial chunk
+        }
+
+    def update(self, state: PyTree, decay: jax.Array, update: jax.Array):
+        m = self.monoid
+        partial = m.combine(state["partial"], {"d": decay, "u": update})
+        count = state["count"] + 1
+
+        def rollover(args):
+            daba, partial = args
+            daba = daba_lite.insert(m, daba, partial)
+            daba = jax.lax.cond(
+                daba_lite.size(daba) > self.window_chunks,
+                lambda s: daba_lite.evict(m, s),
+                lambda s: s,
+                daba,
+            )
+            return daba, m.identity()
+
+        daba, partial = jax.lax.cond(
+            count >= self.chunk,
+            rollover,
+            lambda args: args,
+            (state["daba"], partial),
+        )
+        count = jnp.where(state["count"] + 1 >= self.chunk, 0, count)
+        win = daba_lite.query(m, daba)
+        eff = m.combine(win, partial)  # window ∘ current partial chunk
+        new_state = {"daba": daba, "partial": partial, "count": count}
+        return new_state, eff["u"]

@@ -1,0 +1,114 @@
+"""Deterministic synthetic token stream + windowed stream statistics.
+
+Every batch is a pure function of (seed, step), so a restarted run replays
+exactly the batches it would have seen — the data-side half of
+checkpoint-restart fault tolerance (no shuffle-buffer state to persist).
+
+``WindowedStreamStats`` runs the paper's aggregators over the live stream:
+Bloom-filter windowed dedup (non-invertible OR monoid ⇒ DABA required) and
+min/max/mean token statistics for normalization — the data-pipeline
+integration of the sliding-window technique.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import daba_lite
+from repro.core.monoids import bloom_monoid, bloom_contains, mean_monoid, min_monoid, max_monoid
+from repro.models.common import ModelConfig
+
+
+class SyntheticStream:
+    """Zipf-ish token batches, deterministic per (seed, step), shardable."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        V = self.cfg.vocab_size
+        # Zipf-like marginal over a shuffled vocab for realistic token stats
+        z = rng.zipf(1.3, size=(self.batch, self.seq)).astype(np.int64)
+        tokens = (z % V).astype(np.int32)
+        out = {}
+        if self.cfg.embed_inputs:
+            d = self.cfg.d_model
+            emb = rng.standard_normal((self.batch, self.seq, d)).astype(np.float32)
+            out["embeds"] = jnp.asarray(emb, self.cfg.dtype)
+            if self.cfg.mrope:
+                pos = np.broadcast_to(
+                    np.arange(self.seq, dtype=np.int32), (self.batch, self.seq)
+                )
+                out["positions"] = jnp.asarray(np.broadcast_to(pos, (3,) + pos.shape))
+            out["labels"] = jnp.asarray(tokens)
+        else:
+            out["tokens"] = jnp.asarray(tokens)
+        if self.cfg.is_encoder_decoder:
+            frames = rng.standard_normal(
+                (self.batch, self.cfg.encoder_seq, self.cfg.d_model)
+            ).astype(np.float32)
+            out["frames"] = jnp.asarray(frames, self.cfg.dtype)
+        return out
+
+    def iterate(self, start_step: int = 0) -> Iterator[dict]:
+        step = start_step
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class WindowedStreamStats:
+    """Sliding-window stream statistics maintained by DABA Lite.
+
+    * ``doc_bloom``: Bloom filter over the last ``window`` document hashes —
+      windowed dedup (was this document seen in the recent stream?).
+    * ``tok_mean`` / ``tok_min`` / ``tok_max``: windowed per-batch token
+      statistics for normalization / drift monitoring.
+    """
+
+    def __init__(self, window: int = 256, bloom_words: int = 64):
+        self.window = window
+        self.m_bloom = bloom_monoid(bloom_words)
+        self.m_mean = mean_monoid()
+        self.m_min = min_monoid()
+        self.m_max = max_monoid()
+        cap = window + 1
+        self.bloom = daba_lite.init(self.m_bloom, cap)
+        self.mean = daba_lite.init(self.m_mean, cap)
+        self.min = daba_lite.init(self.m_min, cap)
+        self.max = daba_lite.init(self.m_max, cap)
+
+    def _slide(self, m, st, v):
+        st = daba_lite.insert(m, st, v)
+        if int(daba_lite.size(st)) > self.window:
+            st = daba_lite.evict(m, st)
+        return st
+
+    def observe_batch(self, tokens: jax.Array, doc_id: int) -> dict:
+        tf = tokens.astype(jnp.float32)
+        self.bloom = self._slide(self.m_bloom, self.bloom, jnp.asarray(doc_id))
+        self.mean = self._slide(self.m_mean, self.mean, tf.mean())
+        self.min = self._slide(self.m_min, self.min, tf.min())
+        self.max = self._slide(self.m_max, self.max, tf.max())
+        return self.snapshot()
+
+    def seen_recently(self, doc_id: int) -> bool:
+        filt = daba_lite.query(self.m_bloom, self.bloom)
+        return bool(bloom_contains(filt, jnp.asarray(doc_id)))
+
+    def snapshot(self) -> dict:
+        return {
+            "win_tok_mean": float(
+                self.m_mean.lower(daba_lite.query(self.m_mean, self.mean))
+            ),
+            "win_tok_min": float(daba_lite.query(self.m_min, self.min)),
+            "win_tok_max": float(daba_lite.query(self.m_max, self.max)),
+        }

@@ -1,0 +1,116 @@
+"""Int8 error-feedback gradient compression for data-parallel reductions.
+
+The distributed-optimization trick for the DP axis: gradients are quantized
+to int8 (per-tensor scale) before crossing the interconnect, cutting DP
+all-reduce bytes 2× vs bf16 / 4× vs f32.  Error feedback (Karimireddy et al.)
+accumulates the quantization residual locally and re-injects it next step, so
+convergence is preserved (validated in tests on a quadratic problem).
+
+Two layers:
+  * ``quantize`` / ``dequantize`` / ``ef_compress``: the math, usable anywhere.
+  * ``compressed_psum_mean``: an in-shard_map ring reduce-scatter +
+    all-gather over a named axis whose *wire format* is int8 chunks — the
+    TPU-real collective; falls back to dense psum for tiny tensors.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grad: jax.Array, err: jax.Array):
+    """Error-feedback compression: returns (q, scale, new_err)."""
+    target = grad.astype(jnp.float32) + err
+    q, scale = quantize(target)
+    new_err = target - dequantize(q, scale)
+    return q, scale, new_err
+
+
+def ef_compress_tree(grads: PyTree, errs: PyTree):
+    """Tree version; returns (decompressed_grads, new_errs).
+
+    The decompressed value is exactly what the wire carries — downstream
+    reductions of it model the compressed collective's numerics.
+    """
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs)
+    outs, new_errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        q, s, ne = ef_compress(g, e)
+        outs.append(dequantize(q, s))
+        new_errs.append(ne)
+    return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# In-shard_map int8 ring reduce-scatter + all-gather
+# ---------------------------------------------------------------------------
+
+
+def compressed_psum_mean(x: jax.Array, axis_name: str, min_size: int = 1024):
+    """Mean-reduce ``x`` across ``axis_name`` with an int8 ring.
+
+    Ring reduce-scatter: each of the n-1 steps sends one int8 chunk (plus an
+    f32 scale) to the next neighbor, accumulating in f32 and requantizing —
+    wire bytes ≈ payload/4 vs f32 psum.  Followed by an int8 all-gather of
+    the owned chunk.  Small tensors fall back to a plain psum.
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    orig_shape, orig_dtype = x.shape, x.dtype
+    size = x.size
+    if size < min_size or size % n != 0:
+        return jax.lax.pmean(x, axis_name)
+
+    idx = jax.lax.axis_index(axis_name)
+    chunks = x.astype(jnp.float32).reshape(n, size // n)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after n-1 steps, device i owns the full sum of chunk
+    # (i+1) mod n.  Wire format per step: int8 chunk + f32 scale.
+    def body(step, carry):
+        acc = carry  # (n, chunk) f32: acc[j] = partial sum of chunk j
+        send_j = (idx - step) % n  # chunk index this device forwards
+        payload = jnp.take(acc, send_j, axis=0)
+        q, s = quantize(payload)
+        q = jax.lax.ppermute(q, axis_name, perm)
+        s = jax.lax.ppermute(s, axis_name, perm)
+        recv_j = (idx - step - 1) % n
+        upd = jnp.take(acc, recv_j, axis=0) + dequantize(q, s)
+        return acc.at[recv_j].set(upd)
+
+    acc = jax.lax.fori_loop(0, n - 1, body, chunks)
+    own = (idx + 1) % n
+    mine = jnp.take(acc, own, axis=0) / n  # mean
+
+    # all-gather the owned chunks (int8 wire) back to the full tensor.
+    qm, sm = quantize(mine)
+    qs = jax.lax.all_gather(qm, axis_name, axis=0)  # (n, chunk) int8
+    ss = jax.lax.all_gather(sm, axis_name, axis=0)  # (n,)
+    full = dequantize(qs, ss[:, None])
+    # chunks are owned in ring order: device j owns chunk (j+1)%n
+    order = (jnp.arange(n) + 1) % n
+    full = jnp.zeros_like(full).at[order].set(full)
+    return full.reshape(orig_shape).astype(orig_dtype)

@@ -1,0 +1,44 @@
+"""Process-global sharding context for in-model constraints.
+
+Model code (moe_block, attention) sometimes needs explicit
+``with_sharding_constraint`` hints whose axis names depend on the active
+mesh.  Launchers set the data-parallel axis tuple here before tracing;
+when unset (unit tests, single-device runs) all in-model constraints are
+no-ops.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+_DP_AXES: Optional[tuple] = None
+_DP_SIZE: int = 1
+_TP_SIZE: int = 1
+
+
+def set_dp_axes(axes: Optional[tuple], size: int = 16, tp_size: int = 16):
+    global _DP_AXES, _DP_SIZE, _TP_SIZE
+    _DP_AXES = tuple(axes) if axes else None
+    _DP_SIZE = size if axes else 1
+    _TP_SIZE = tp_size if axes else 1
+
+
+def dp_axes() -> Optional[tuple]:
+    return _DP_AXES
+
+
+def dp_size() -> int:
+    return _DP_SIZE
+
+
+def tp_size() -> int:
+    return _TP_SIZE
+
+
+def constrain(x, spec):
+    """with_sharding_constraint iff a dp context is active."""
+    if _DP_AXES is None:
+        return x
+    import jax
+
+    return jax.lax.with_sharding_constraint(x, spec)

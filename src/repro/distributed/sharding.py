@@ -1,0 +1,253 @@
+"""Sharding rules: parameter / batch / decode-state PartitionSpecs.
+
+Mesh axes (launch/mesh.py): single-pod ``(data=16, model=16)``; multi-pod
+``(pod=2, data=16, model=16)``.  Data parallelism runs over ``("pod","data")``
+(gradient psum crosses pods — the multi-pod dry-run proves that axis shards),
+tensor/expert parallelism over ``"model"``.
+
+Rules are keyed on parameter *path names* (the nested-dict keys), so they
+apply uniformly to the layer-stacked (leading L axis) parameters:
+
+  embed / lm_head    (V, d)      → (model, None)        vocab-sharded
+  attn  wq/wk/wv     (d, H, hd)  → (None, model, None)  head-sharded TP
+  attn  wo           (H, hd, d)  → (model, None, None)
+  mlp   gate/up      (d, f)      → (None, model)        f-sharded TP
+  mlp   down         (f, d)      → (model, None)
+  moe   experts      (E, d, f)   → (model, None, None)  EP
+  rwkv/mamba projections          f/head-sharded TP (heads follow d_ff)
+  norms / scalars                 replicated
+
+Activations: batch over ("pod","data").  For decode shapes whose batch is
+smaller than the DP axis (long_500k: B=1), the KV/state sequence or head axis
+is sharded instead (see ``decode_state_pspecs``).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+DP_AXES = ("pod", "data")  # flattened data-parallel axes (when present)
+TP = "model"
+
+
+def _dp(mesh) -> tuple:
+    """The data-parallel mesh axes present in this mesh."""
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _rule_for(path: tuple[str, ...], leaf, tp: int) -> P:
+    """PartitionSpec for one parameter leaf, by path name + rank.
+
+    Every TP assignment is divisibility-checked against the model-axis size
+    ``tp``; when a dimension does not divide, the rule falls back (replicate
+    attention heads, f-TP instead of EP for few-expert MoE).  The fallbacks
+    are recorded as §Perf baseline costs — e.g. arctic's 56 heads replicate
+    over a 16-way axis, making its attention core the hillclimb target.
+    """
+    name = path[-1]
+    stacked = "layers" in path  # leading L axis from the layer stack
+    pre = (None,) if stacked else ()
+
+    def spec(*axes):
+        return P(*(pre + axes))
+
+    def tpif(dim_size):
+        return TP if dim_size % tp == 0 else None
+
+    dims = leaf.shape[len(pre):]
+
+    if name in ("embed", "lm_head"):
+        return P(tpif(leaf.shape[0]), None)  # vocab-sharded (never stacked)
+    if name in ("wq", "wk", "wv"):
+        return spec(None, tpif(dims[1]), None)  # (d, H|Hkv, hd)
+    if name == "wo":
+        return spec(tpif(dims[0]), None, None)  # (H, hd, d)
+    if name in ("w_gate", "w_up"):
+        if len(dims) == 3:  # MoE experts (E, d, f): EP, else f-TP
+            if dims[0] % tp == 0:
+                return spec(TP, None, None)
+            return spec(None, None, tpif(dims[2]))
+        return spec(None, tpif(dims[1]))
+    if name == "w_down":
+        if len(dims) == 3:  # MoE experts (E, f, d)
+            if dims[0] % tp == 0:
+                return spec(TP, None, None)
+            return spec(None, tpif(dims[1]), None)
+        return spec(tpif(dims[0]), None)
+    if name == "router":
+        return spec(None, None)
+    # RWKV-6
+    if name in ("w_r", "w_k", "w_v", "w_g"):
+        return spec(None, tpif(dims[1]))
+    if name == "w_o":
+        return spec(tpif(dims[0]), None)
+    if name in ("decay_w0", "bonus_u"):
+        return spec(tpif(dims[0]), None)  # (H, K): heads sharded
+    if name in ("decay_a", "decay_b", "mu", "cm_mu"):
+        return spec(*(None,) * len(dims))
+    if name == "cm_k":
+        return spec(None, tpif(dims[1]))
+    if name == "cm_v":
+        return spec(tpif(dims[0]), None)
+    # Mamba-2
+    if name == "w_in":
+        return spec(None, tpif(dims[1]))
+    if name in ("w_bc", "w_dt"):
+        return spec(tpif(dims[0]), None)
+    if name == "conv_w":
+        return spec(None, tpif(dims[1]))
+    if name == "norm" and len(dims) == 1:
+        return spec(tpif(dims[0]))  # (f,) rmsnorm over the sharded inner dim
+    if name in ("dt_bias", "a_log", "d_skip"):
+        return spec(None)
+    # norms and anything 1-D / scalar: replicate
+    return spec(*(None,) * len(dims))
+
+
+def param_pspecs(
+    cfg: ModelConfig,
+    params_shape: PyTree,
+    tp: int = 16,
+    fsdp_mesh=None,
+    fsdp_min_size: int = 1 << 20,
+) -> PyTree:
+    """PartitionSpec pytree matching ``params_shape`` (from eval_shape).
+
+    With ``fsdp_mesh`` set, every large leaf that has no data-parallel axis
+    gets one added on its first divisible unsharded dimension (ZeRO-3-style
+    full parameter sharding).  With scanned layer stacks the just-in-time
+    all-gather happens inside the scan body, so the working set stays one
+    layer.  Required for arctic-480b / grok-1-314b (params+optimizer exceed
+    a pod's aggregate HBM 16-way sharded) and used for all serving params.
+    """
+
+    dp = _dp(fsdp_mesh) if fsdp_mesh is not None else ()
+    dp_size = 1
+    for a in dp:
+        dp_size *= fsdp_mesh.shape[a]
+
+    def assign(path, leaf):
+        names = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p)
+            for p in path
+        )
+        spec = _rule_for(names, leaf, tp)
+        if not dp or dp_size <= 1 or leaf.size < fsdp_min_size:
+            return spec
+        axes = list(spec) + [None] * (leaf.ndim - len(spec))
+        stacked = "layers" in names
+        lo = 1 if stacked else 0
+        has_tp = any(a == TP for a in axes)
+        is_expert = names[-1] in ("w_gate", "w_up", "w_down") and leaf.ndim - lo == 3
+        # FSDP dim preference is measured, not aesthetic (EXPERIMENTS §Perf):
+        #  * MoE expert tensors (E, d, f): shard the LAST (output) dim —
+        #    d-sharding makes the dispatch einsum replicate the batch 16×
+        #    (arctic baseline pathology);
+        #  * other weights WITHOUT a TP axis (replicated-attention archs
+        #    like arctic): LAST dim, so conflicts resolve via MB-scale
+        #    weight gathers instead of GB-scale activation gathers;
+        #  * weights WITH a TP axis (head/f-sharded): FIRST dim — last-dim
+        #    sharding regressed gemma2 train 0.7× / llama prefill 0.5×
+        #    (output-dim conflicts with the existing TP layout).
+        order = (
+            range(lo, leaf.ndim)
+            if (has_tp and not is_expert)
+            else range(leaf.ndim - 1, lo - 1, -1)
+        )
+        for i in order:
+            if axes[i] is None and leaf.shape[i] % dp_size == 0:
+                axes[i] = dp
+                return P(*axes)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def batch_pspecs(cfg: ModelConfig, batch_shape: dict, mesh) -> dict:
+    dp = _dp(mesh)
+    out = {}
+    for k, v in batch_shape.items():
+        if k == "positions":  # (3, B, S)
+            out[k] = P(None, dp, None)
+        elif v.ndim >= 2:
+            out[k] = P(dp, *(None,) * (v.ndim - 1))
+        else:
+            out[k] = P(dp)
+    return out
+
+
+def decode_state_pspecs(cfg: ModelConfig, state_shape: dict, mesh) -> dict:
+    """KV caches (L, B, Hkv, S, hd) / SSM states (L, B, H, K, V).
+
+    Batch shards over DP when divisible; otherwise the cache sequence axis
+    (full-attention caches) or nothing.  Heads shard over TP when divisible —
+    decode TP mirrors the train-time head sharding.
+    """
+    dp = _dp(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp_size = mesh.shape[TP] if TP in mesh.axis_names else 1
+
+    def assign(path, leaf):
+        names = tuple(
+            p.key if isinstance(p, jax.tree_util.DictKey) else str(p)
+            for p in path
+        )
+        name = names[-1]
+        if name == "pos" or leaf.ndim == 0:
+            return P()
+        if name in ("k", "v", "k_local", "v_local", "k_global", "v_global",
+                    "xk", "xv", "shared_k", "shared_v"):
+            L, B, Hkv, S, hd = leaf.shape
+            b_ax = dp if B % max(dp_size, 1) == 0 and dp_size > 1 else None
+            h_ax = TP if Hkv % max(tp_size, 1) == 0 and tp_size > 1 else None
+            # Shard the cache sequence over whichever axes remain unused:
+            # few-kv-head archs (grok Hkv=8 < 16) S-shard over model; B=1
+            # long-context decode S-shards over data.
+            s_axes = []
+            if b_ax is None and dp_size > 1 and S % dp_size == 0:
+                s_axes.extend(dp)
+            if h_ax is None and tp_size > 1 and S % (tp_size * max(dp_size if s_axes else 1, 1)) == 0:
+                s_axes.append(TP)
+            s_ax = tuple(s_axes) if s_axes else None
+            return P(None, b_ax, h_ax, s_ax, None)
+        if name == "ssm":
+            L, B, H = leaf.shape[:3]
+            b_ax = dp if B % max(dp_size, 1) == 0 and dp_size > 1 else None
+            h_ax = TP if H % max(tp_size, 1) == 0 and tp_size > 1 else None
+            return P(None, b_ax, h_ax, *(None,) * (leaf.ndim - 3))
+        if name in ("tm_last", "cm_last"):
+            L, B, d = leaf.shape
+            b_ax = dp if B % max(dp_size, 1) == 0 and dp_size > 1 else None
+            return P(None, b_ax, None)
+        if name == "conv":
+            L, B, _, f = leaf.shape
+            b_ax = dp if B % max(dp_size, 1) == 0 and dp_size > 1 else None
+            f_ax = TP if f % max(tp_size, 1) == 0 and tp_size > 1 else None
+            return P(None, b_ax, None, f_ax)
+        return P(*(None,) * leaf.ndim)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def token_pspec(mesh, batch: int) -> P:
+    dp = _dp(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    return P(dp) if dp_size > 1 and batch % dp_size == 0 else P()
+
+
+def make_shardings(mesh, pspecs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

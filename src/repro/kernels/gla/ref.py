@@ -1,0 +1,20 @@
+"""Oracle for the fused GLA kernel: the model substrate's own sequential scan
+(repro.models.ssm.gla_sequential), which the chunked forms are tested against."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import gla_sequential
+
+
+def gla_ref(r, k, v, a, bonus_u=None, variant: str = "mamba"):
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    s0 = jnp.zeros((B, H, K, V), jnp.float32)
+    bu = bonus_u if variant == "rwkv" else None
+    out, _ = gla_sequential(
+        r.astype(jnp.float32), k.astype(jnp.float32),
+        v.astype(jnp.float32), a.astype(jnp.float32), s0, bonus_u=bu,
+    )
+    return out

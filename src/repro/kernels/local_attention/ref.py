@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: dense masked softmax attention with sliding window."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def local_attention_ref(q, k, v, *, window: int, softcap: float = 0.0):
+    """q, k, v: (BH, T, D); causal window of ``window`` positions incl. self."""
+    BH, T, D = q.shape
+    s = jnp.einsum("btd,bsd->bts", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    tpos = jnp.arange(T)[:, None]
+    spos = jnp.arange(T)[None, :]
+    mask = (spos <= tpos) & (spos > tpos - window)
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bts,bsd->btd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for dense sliding-window aggregation.
+
+O(T·w) work — slow but trivially correct: for each shift d ∈ [0, w) combine
+the d-shifted stream.  Front-truncated windows (t < w-1) aggregate only the
+available prefix, matching the SWAG ``query`` semantics during fill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sliding_window.kernel import combine_fn, identity_for
+
+
+def sliding_window_ref(x: jax.Array, *, window: int, op: str = "sum") -> jax.Array:
+    if x.ndim != 2:
+        raise ValueError(f"expected (B, T), got {x.shape}")
+    comb = combine_fn(op)
+    ident = identity_for(op, x.dtype)
+    acc = x
+    for d in range(1, window):
+        shifted = jnp.concatenate(
+            [jnp.full((x.shape[0], d), ident, x.dtype), x[:, :-d]], axis=1
+        )
+        # older operand LEFT (shifted is older)
+        acc = comb(shifted, acc)
+    return acc

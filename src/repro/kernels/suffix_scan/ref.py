@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the batched suffix scan (flip)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sliding_window.kernel import combine_fn
+
+
+def suffix_scan_ref(x: jax.Array, *, op: str = "sum") -> jax.Array:
+    comb = combine_fn(op)
+    # associative_scan over the reversed axis; operand order must be
+    # older-LEFT after un-reversing, so flip the combine's arguments.
+    rev = jnp.flip(x, axis=-1)
+    scanned = jax.lax.associative_scan(lambda a, b: comb(b, a), rev, axis=-1)
+    return jnp.flip(scanned, axis=-1)

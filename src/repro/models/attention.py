@@ -1,0 +1,285 @@
+"""Attention: GQA with full/local patterns, softcap, RoPE; train + decode.
+
+Training/prefill path is a memory-efficient blocked attention (flash
+algorithm in pure jnp, ``lax.scan`` over query chunks) so that 32k-sequence
+activations fit device memory at dry-run time and HLO FLOPs reflect the true
+2·B·H·T²·D attention cost.  On real TPU the Pallas ``local_attention`` kernel
+(repro.kernels.local_attention) is the drop-in fast path via
+``use_pallas=True``.
+
+Decode path consumes a KV cache: full-attention layers keep a (S_max) cache;
+local layers keep a ring cache of ``window`` slots — the attention analogue
+of the paper's FIFO eviction.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_mrope, apply_rope
+
+_NEG_INF = -1.0e30
+
+
+def _maybe_gather(w, cfg: ModelConfig):
+    """Force the JIT all-gather of FSDP-stored replicated-TP weights (archs
+    whose heads don't divide the model axis) instead of letting the SPMD
+    partitioner replicate the batch compute."""
+    if cfg.gather_attn_weights:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import ctx
+
+        return ctx.constrain(w, P(*(None,) * w.ndim))
+    return w
+
+
+def qkv_project(params, x, cfg: ModelConfig):
+    """x: (B, T, d) → q: (B, H, T, hd), k/v: (B, Hkv, T, hd)."""
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,dhk->bhtk", x, _maybe_gather(params["wq"], cfg))
+    k = jnp.einsum("btd,dhk->bhtk", x, _maybe_gather(params["wk"], cfg))
+    v = jnp.einsum("btd,dhk->bhtk", x, _maybe_gather(params["wv"], cfg))
+    return q, k, v
+
+
+def out_project(params, o, cfg: Optional[ModelConfig] = None):
+    w = params["wo"] if cfg is None else _maybe_gather(params["wo"], cfg)
+    return jnp.einsum("bhtk,hkd->btd", o, w)
+
+
+def _expand_kv(k: jax.Array, num_q_heads: int) -> jax.Array:
+    rep = num_q_heads // k.shape[1]
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=1)
+
+
+def blocked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=0,  # 0 = unbounded (full); may be a traced scalar (alternating)
+    softcap: float = 0.0,
+    q_chunk: int = 512,
+    q_offset: int = 0,
+    unroll: bool = False,
+) -> jax.Array:
+    """Online-softmax blocked attention.  q: (B,H,T,D); k,v: (B,H,S,D).
+
+    ``q_offset`` is the absolute position of q[..., 0, :] relative to k's
+    position 0 (for prefill continuation / cross-chunk decode).
+    """
+    B, H, T, D = q.shape
+    S = k.shape[2]
+    static_window = isinstance(window, int)
+    if not static_window:
+        # traced per-layer window: 0 → effectively unbounded
+        window = jnp.where(window > 0, window, S + T + 1)
+    scale = 1.0 / math.sqrt(D)
+    nq = max(1, math.ceil(T / q_chunk))
+    Tp = nq * q_chunk
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, Tp - T), (0, 0)))
+    qs = q.reshape(B, H, nq, q_chunk, D).transpose(2, 0, 1, 3, 4)  # (nq,B,H,c,D)
+    kpos = jnp.arange(S)
+
+    def one_chunk(carry, args):
+        qc, idx = args  # (B,H,c,D), scalar chunk index
+        qpos = q_offset + idx * q_chunk + jnp.arange(q_chunk)
+        s = jnp.einsum(
+            "bhtd,bhsd->bhts", qc.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((q_chunk, S), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if not static_window or window > 0:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None], s, _NEG_INF)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(mask[None, None], p, 0.0)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32))
+        o = o / jnp.where(l > 0, l, 1.0)
+        return carry, o.astype(q.dtype)
+
+    _, outs = jax.lax.scan(
+        one_chunk, None, (qs, jnp.arange(nq)), unroll=nq if unroll else 1
+    )  # (nq, B, H, c, D)
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, Tp, D)
+    return out[:, :, :T]
+
+
+def attention_train(
+    params,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    is_local,  # scalar bool (traced): this layer uses the sliding window
+    kv_override: Optional[tuple] = None,  # cross-attention (whisper)
+    causal: bool = True,
+    return_kv: bool = False,  # prefill: hand back post-RoPE K/V for caching
+):
+    """Full training/prefill attention for one layer.  x: (B, T, d)."""
+    q, k, v = qkv_project(params, x, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    elif cfg.mrope:
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        pos2d = positions if positions.ndim == 2 else positions[0]
+        q = apply_rope(q, pos2d, cfg.rope_theta)
+        k = apply_rope(k, pos2d, cfg.rope_theta)
+    kv_cacheable = (k, v)
+    k = _expand_kv(k, cfg.num_heads)
+    v = _expand_kv(v, cfg.num_heads)
+
+    if cfg.pin_attn_batch:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import ctx
+
+        dp = ctx.dp_axes()
+        if dp:
+            # Heads don't divide the model axis (arctic 56H, qwen2-vl 12H):
+            # shard the attention section's BATCH over data AND model, so
+            # the otherwise-idle model axis shares the quadratic attention
+            # compute (16× per-device FLOP reduction measured on arctic).
+            full = dp + ("model",)
+            if q.shape[0] % (ctx.dp_size() * ctx.tp_size()) == 0:
+                axes = full
+            elif q.shape[0] % ctx.dp_size() == 0:
+                axes = dp
+            else:
+                axes = None
+            if axes:
+                pin = lambda t: ctx.constrain(t, P(axes, None, None, None))
+                q, k, v = pin(q), pin(k), pin(v)
+
+    if cfg.attn_pattern == "alternating":
+        # Both patterns share the same einsum structure; select on mask only
+        # (the per-layer window is a traced scalar under the layer scan).
+        window = jnp.where(is_local, cfg.local_window, 0)
+    elif cfg.attn_pattern == "local":
+        window = cfg.local_window
+    else:
+        window = 0
+    out = blocked_attention(
+        q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap,
+        q_chunk=cfg.q_chunk, unroll=cfg.unroll_attn,
+    )
+    out = out_project(params, out, cfg)
+    if cfg.pin_attn_batch:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed import ctx
+
+        dp = ctx.dp_axes()
+        if dp and out.shape[0] % ctx.dp_size() == 0:
+            out = ctx.constrain(out, P(dp, None, None))
+    if return_kv:
+        return out, kv_cacheable
+    return out
+
+
+def attention_decode(
+    params,
+    x: jax.Array,  # (B, 1, d) current token
+    cfg: ModelConfig,
+    *,
+    k_cache: jax.Array,  # (B, Hkv, S, hd)
+    v_cache: jax.Array,
+    cache_pos: jax.Array,  # (B,) int32: next write slot (ring for local)
+    abs_pos: jax.Array,  # (B,) int32: absolute token position per sequence
+    is_local,
+    kv_override: Optional[tuple] = None,
+):
+    """One-token decode.  Returns (out (B,1,d), new_k_cache, new_v_cache).
+
+    Positions are per-row so continuous batching can mix sequences at
+    different depths in one decode batch.
+    """
+    B = x.shape[0]
+    S = k_cache.shape[2]
+    cache_pos = jnp.broadcast_to(cache_pos, (B,))
+    abs_pos = jnp.broadcast_to(abs_pos, (B,))
+    q, k, v = qkv_project(params, x, cfg)
+    if kv_override is None:
+        pos = abs_pos[:, None]  # (B, 1)
+        if cfg.mrope:
+            pos3 = jnp.broadcast_to(abs_pos[None, :, None], (3, B, 1))
+            q = apply_mrope(q, pos3, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.rope_theta)
+        else:
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        slot = cache_pos % S  # (B,)
+        upd = jax.vmap(
+            lambda c, kn, s: jax.lax.dynamic_update_slice_in_dim(c, kn, s, axis=1)
+        )
+        k_cache = upd(k_cache, k, slot)
+        v_cache = upd(v_cache, v, slot)
+        kk, vv = k_cache, v_cache
+        # Absolute position of each cache slot (ring-aware for local layers).
+        slots = jnp.arange(S)[None, :]  # (1, S)
+        wraps = ((cache_pos // S) * S)[:, None]  # (B, 1)
+        slot_b = slot[:, None]
+        slot_pos = jnp.where(slots <= slot_b, wraps + slots, wraps - S + slots)
+        valid = (slot_pos >= 0) & (slot_pos <= abs_pos[:, None])
+        valid &= jnp.where(
+            is_local, slot_pos > abs_pos[:, None] - cfg.local_window, True
+        )
+    else:
+        kk, vv = kv_override
+        valid = jnp.ones((B, kk.shape[2]), bool)
+
+    # Grouped-query attention WITHOUT expanding the KV cache: q is reshaped
+    # to (B, G, rep, 1, D) and contracted against the (B, G, S, D) cache
+    # directly.  This matters enormously when the cache's S axis is sharded
+    # (few-kv-head archs): a ``jnp.repeat``-expanded cache defeats sharding
+    # propagation and forces a full f32 cache all-gather (measured: 2×17 GB
+    # per layer for grok decode_32k).  f32 accumulation happens inside the
+    # einsum via preferred_element_type — the cache is read in bf16.
+    G = kk.shape[1]
+    rep = cfg.num_heads // G
+    qg = q.reshape(B, G, rep, 1, cfg.hd)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    s = jnp.einsum(
+        "bgrtd,bgsd->bgrts", qg, kk, preferred_element_type=jnp.float32
+    ) * scale
+    if cfg.attn_softcap > 0.0:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    s = jnp.where(valid[:, None, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bgrts,bgsd->bgrtd", p.astype(x.dtype), vv,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(B, cfg.num_heads, 1, cfg.hd).astype(x.dtype)
+    return out_project(params, o, cfg), k_cache, v_cache
+
+
+def init_attention_params(key, cfg: ModelConfig, dtype=None):
+    from repro.models.common import dense_init
+
+    dtype = dtype or cfg.dtype
+    d, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, H, hd), dtype),
+        "wk": dense_init(k2, (d, Hkv, hd), dtype),
+        "wv": dense_init(k3, (d, Hkv, hd), dtype),
+        "wo": dense_init(k4, (H, hd, d), dtype, scale=1.0 / math.sqrt(H * hd)),
+    }

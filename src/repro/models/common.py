@@ -1,0 +1,228 @@
+"""Model substrate: config schema, initializers, norms, RoPE / M-RoPE.
+
+All models are pure-functional JAX: params are nested dicts of arrays,
+layer stacks carry a leading (L,) axis and are driven by ``lax.scan`` so
+compile time and HLO size are O(1) in depth (required for 46-layer dry-runs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config object covers all 10 assigned architectures."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention pattern
+    attn_pattern: str = "full"  # full | local | alternating(local/global)
+    local_window: int = 4096
+    logit_softcap: float = 0.0  # gemma2 final-logit capping
+    attn_softcap: float = 0.0  # gemma2 attention-score capping
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 2
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel
+    capacity_factor: float = 1.25
+
+    # SSM / RWKV
+    ssm_state: int = 0
+    rwkv: bool = False
+    mamba: bool = False
+    shared_attn_every: int = 0  # zamba2: shared attention block period
+
+    # positions
+    rope_theta: float = 10000.0
+    mrope: bool = False  # qwen2-vl 3-section M-RoPE
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    encoder_layers: int = 0
+    encoder_seq: int = 1500  # whisper 30 s @ 50 Hz after conv stub
+
+    # frontend stub: inputs are precomputed embeddings, not token ids
+    embed_inputs: bool = False
+
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    remat: bool = True  # activation checkpointing per layer
+
+    # --- cost-accounting knobs (dry-run only; defaults = production) ------
+    # XLA cost_analysis counts while-loop bodies once; the dry-run compiles
+    # reduced-depth variants with unrolled scans to recover exact per-layer
+    # costs (launch/dryrun.py).
+    unroll_layers: bool = False  # unroll the layer scan(s)
+    unroll_attn: bool = False  # unroll the blocked-attention q-chunk scan
+    q_chunk: int = 512  # blocked-attention query chunk (seq_len ⇒ 1 chunk)
+
+    # --- sharding-strategy knobs (§Perf hillclimb levers) ------------------
+    # moe_2d: constrain MoE dispatch activations to the expert weights' 2-D
+    # (E×d over model×data) layout, so the expert einsums contract the
+    # data-sharded dim instead of replicating the batch (arctic) or
+    # gathering weights per step (grok decode).
+    moe_2d: bool = False
+    # gather_attn_weights: for archs whose heads don't divide the model axis
+    # (replicated attention weights + FSDP storage), force the JIT weight
+    # all-gather instead of letting the partitioner replicate batch compute.
+    gather_attn_weights: bool = False
+    # pin_attn_batch: constrain q/k/v/o activations to stay batch-sharded
+    # through the attention block, so FSDP-stored weights are gathered
+    # (MBs) instead of activations (GBs) — the arctic-56-head fix (§Perf).
+    pin_attn_batch: bool = False
+    # gla_chunk: chunked-GLA block length (SSM archs): state HBM traffic
+    # ∝ 1/chunk, intra-chunk compute ∝ chunk.
+    gla_chunk: int = 0  # 0 = per-family default (rwkv 64, mamba 16)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 16 so the embedding/logits can
+        always shard over the 16-way model axis (whisper: 51866 → 51872).
+        Pad logits are masked to -inf in logits_fn."""
+        return -(-self.vocab_size // 16) * 16
+
+    @property
+    def is_attention_free(self) -> bool:
+        return (self.rwkv or self.mamba) and self.shared_attn_every == 0
+
+    def layer_is_local(self, layer_idx: jax.Array) -> jax.Array:
+        """gemma2: even layers local, odd layers global (alternating)."""
+        if self.attn_pattern == "local":
+            return jnp.ones_like(layer_idx, bool)
+        if self.attn_pattern == "alternating":
+            return (layer_idx % 2) == 0
+        return jnp.zeros_like(layer_idx, bool)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline accounting)."""
+        d, f, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        hd, H, Hkv = self.hd, self.num_heads, self.num_kv_heads
+        attn = d * H * hd + 2 * d * Hkv * hd + H * hd * d
+        dense_mlp = 3 * d * f
+        per_layer = 0
+        if self.rwkv:
+            # r,k,v,g,o projections + decay lora + channel-mix (≈ swiglu)
+            per_layer = 5 * d * d + 2 * d * 64 + 3 * d * f
+        elif self.mamba:
+            S = self.ssm_state
+            per_layer = 2 * d * f + f * (2 * S) + f * d + f  # in/out/BC/dt
+        elif self.num_experts > 0:
+            per_layer = attn + 3 * d * f * self.num_experts + d * self.num_experts
+            if self.moe_dense_residual:
+                per_layer += dense_mlp
+        else:
+            per_layer = attn + dense_mlp
+        total = L * per_layer + V * d  # embed (+ tied head)
+        if self.shared_attn_every > 0:
+            total += attn + dense_mlp  # one shared block
+        if self.is_encoder_decoder:
+            total += self.encoder_layers * (attn + dense_mlp)
+            total += L * attn  # cross-attention
+        if not self.tie_embeddings:
+            total += V * d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        if self.num_experts == 0:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full = self.param_count()
+        inactive = self.num_layers * 3 * d * f * (self.num_experts - self.experts_per_token)
+        return int(full - inactive)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (used by smoke tests / examples; dry-run uses eval_shape)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, T, D); positions: (B, T) int32."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,T,D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(2, 3, 3)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions (3, B, T) for (t, h, w) streams.
+
+    The D/2 frequency slots are split into ``sections`` (scaled to D/2) and
+    each section uses its own position stream.  With text-only positions
+    (all three streams equal) this reduces to standard RoPE.
+    """
+    D = x.shape[-1]
+    half = D // 2
+    sec = [s * half // sum(sections) for s in sections]
+    sec[-1] = half - sum(sec[:-1])
+    freqs = rope_freqs(D, theta)  # (half,)
+    # Build a (B, T, half) angle table with per-section position streams.
+    parts = []
+    off = 0
+    for i, s in enumerate(sec):
+        pos = positions[i].astype(jnp.float32)  # (B, T)
+        parts.append(pos[:, :, None] * freqs[off : off + s])
+        off += s
+    angles = jnp.concatenate(parts, axis=-1)[:, None, :, :]  # (B,1,T,half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

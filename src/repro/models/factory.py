@@ -1,0 +1,120 @@
+"""Model factory: build a model + its input specs for any (arch × shape).
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input — weak-type-correct, shardable, and allocation-free — used
+by the multi-pod dry-run (lower + compile only).  ``reduced_config`` shrinks
+any architecture to a CPU-smoke-testable size while preserving its structural
+features (alternating windows, MoE routing, shared blocks, enc-dec, M-RoPE).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.common import ModelConfig
+from repro.models.transformer import DecodeSpec, init_decode_state
+
+
+def decode_spec(cfg: ModelConfig, shape: ShapeSpec) -> DecodeSpec:
+    return DecodeSpec(
+        cache_len=shape.seq_len,
+        local_cache_len=min(cfg.local_window, shape.seq_len),
+        batch=shape.global_batch,
+    )
+
+
+def _token_batch(cfg: ModelConfig, B: int, S: int, with_labels: bool):
+    specs = {}
+    if cfg.embed_inputs:
+        specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+        if cfg.mrope:
+            specs["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+        if with_labels:
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": _token_batch(cfg, B, S, with_labels=True)}
+    if shape.kind == "prefill":
+        return {"batch": _token_batch(cfg, B, S, with_labels=False)}
+    if shape.kind == "decode":
+        state = jax.eval_shape(
+            lambda: init_decode_state(None, cfg, decode_spec(cfg, shape))
+        )
+        return {
+            "state": state,
+            "token": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def param_specs(cfg: ModelConfig):
+    """Allocation-free parameter shapes via eval_shape of the initializer."""
+    from repro.models.transformer import init_params
+
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Shrink to smoke-test size, preserving every structural feature."""
+    L = cfg.num_layers
+    if cfg.shared_attn_every > 0:
+        layers, every = 6, 3
+    elif cfg.attn_pattern == "alternating":
+        layers, every = 4, 0
+    else:
+        layers, every = 2, 0
+    heads = 4
+    kv = heads if cfg.num_kv_heads == cfg.num_heads else 2
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=128,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        shared_attn_every=every,
+        local_window=16,
+        ssm_state=16 if cfg.ssm_state else 0,
+        encoder_layers=2 if cfg.is_encoder_decoder else 0,
+        encoder_seq=24 if cfg.is_encoder_decoder else cfg.encoder_seq,
+        dtype=jnp.float32,
+        remat=False,
+    )
+
+
+def make_smoke_batch(cfg: ModelConfig, key, B: int = 2, S: int = 16) -> dict:
+    """Concrete random batch matching input_specs(train) for smoke tests."""
+    ks = jax.random.split(key, 4)
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.random.normal(ks[0], (B, S, cfg.d_model), cfg.dtype)
+        if cfg.mrope:
+            pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            batch["positions"] = jnp.broadcast_to(pos, (3, B, S))
+        batch["labels"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = jax.random.normal(
+            ks[2], (B, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return batch

@@ -1,0 +1,163 @@
+"""Feed-forward blocks: SwiGLU MLP and capacity-based top-k MoE.
+
+MoE uses FLOP-free scatter/gather dispatch (tokens → per-expert capacity
+buckets) followed by dense per-expert matmuls, so HLO FLOPs reflect the true
+active compute (≈ 2 · tokens · k · 3 · d · f · capacity_factor) instead of an
+all-experts einsum.  Experts are sharded over the mesh "model" axis (EP);
+arctic's parallel dense-residual MLP is supported via ``moe_dense_residual``.
+
+Router telemetry: per-expert windowed load statistics (maxcount monoid over
+the hottest expert) feed the training-loop SWAG metrics.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+from repro.models.common import ModelConfig, dense_init
+
+
+def swiglu(params, x):
+    """x: (..., d) → (..., d) through gate/up/down."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def init_mlp_params(key, d: int, f: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_down": dense_init(k3, (f, d), dtype, scale=1.0 / math.sqrt(f)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(
+        math.ceil(
+            num_tokens * cfg.experts_per_token * cfg.capacity_factor / cfg.num_experts
+        )
+    )
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_block(params, x, cfg: ModelConfig):
+    """Top-k token-choice MoE with per-expert capacity.  x: (B, T, d).
+
+    Dispatch is computed *per batch row* so the position-assignment cumsum
+    runs along the (unsharded) sequence axis — zero collectives are induced
+    by dispatch when B is data-sharded and E is expert-sharded.
+
+    Returns (out, aux) where aux = {"lb_loss", "max_load"} for telemetry.
+    """
+    B, T, d = x.shape
+    if T == 1 and B > 1:
+        # Decode: dispatch across the BATCH as one row.  Per-row capacity
+        # with T=1 pads each expert to the 8-slot floor — 32× wasted expert
+        # FLOPs at grok's decode shape (measured, §Perf); batch-wise
+        # dispatch sizes capacity to ~B·k/E.
+        from jax.sharding import PartitionSpec as P
+
+        dp = ctx.dp_axes()
+        if cfg.moe_2d and dp:
+            # Decode batch is tiny (≈MBs) while expert weights are GBs/layer:
+            # replicate the batch, dispatch locally, and contract on the
+            # d-sharded weights directly — zero weight gathers (§Perf).
+            x = ctx.constrain(x, P(None, None, None))
+        out, aux = moe_block(params, x.reshape(1, B, d), cfg)
+        out = out.reshape(B, T, d)
+        if cfg.moe_2d and dp and B % ctx.dp_size() == 0:
+            out = ctx.constrain(out, P(dp, None, None))
+        return out, aux
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(T, cfg)  # capacity per expert per batch row
+
+    logits = jnp.einsum(
+        "btd,de->bte", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, T, E)
+    top_w, top_e = jax.lax.top_k(probs, K)  # (B, T, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # --- dispatch: position of each (token, k) assignment within its expert,
+    #     computed independently per batch row (cumsum along T*K only).
+    flat_e = top_e.reshape(B, T * K)  # expert ids in token order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (B, T*K, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot
+    pos_in_expert = pos.sum(axis=-1) - 1  # (B, T*K)
+    keep = pos_in_expert < C
+    slot = jnp.where(keep, flat_e * C + pos_in_expert, E * C)  # (B, T*K)
+
+    xr = jnp.repeat(x, K, axis=1)  # (B, T*K, d) token per assignment
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype)
+    buf = jax.vmap(lambda b, s, v: b.at[s].set(v))(buf, slot, xr)
+    xe = buf[:, : E * C].reshape(B, E, C, d)
+
+    # --- per-expert SwiGLU (dense; E is EP-shardable, B data-shardable)
+    if cfg.moe_2d and ctx.dp_axes():
+        # 2-D expert TP: align the dispatch buffer with the weights' E×d
+        # (model × data) grid so the einsums contract the data-sharded dim —
+        # no batch replication (arctic) and no per-step weight gather (grok
+        # decode).  Output returns to batch sharding for the combine.
+        from jax.sharding import PartitionSpec as P
+
+        dp = ctx.dp_axes()
+        e_ax = "model" if E % 16 == 0 else None
+        xe = ctx.constrain(xe, P(None, e_ax, None, dp))
+        g = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+        u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ye = jnp.einsum("becf,efd->becd", h, params["w_down"])
+        b_ax = dp if B % ctx.dp_size() == 0 else None
+        ye = ctx.constrain(ye, P(b_ax, e_ax, None, None))
+    else:
+        g = jnp.einsum("becd,edf->becf", xe, params["w_gate"])
+        u = jnp.einsum("becd,edf->becf", xe, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        ye = jnp.einsum("becf,efd->becd", h, params["w_down"])  # (B, E, C, d)
+
+    # --- combine: gather each assignment's output, weight, and sum over K
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * C, d), jnp.zeros((B, 1, d), x.dtype)], axis=1
+    )
+    yr = jax.vmap(lambda y, s: y[s])(ye_flat, slot)  # (B, T*K, d)
+    yr = yr * top_w.reshape(B, T * K, 1).astype(x.dtype)
+    out = yr.reshape(B, T, K, d).sum(axis=2)
+
+    if cfg.moe_dense_residual:
+        out = out + swiglu(params["dense"], x)
+
+    # load-balancing loss (Switch-style) + hottest-expert load for telemetry
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = onehot.sum(axis=(0, 1)).astype(jnp.float32) / max(B * T * K, 1)
+    lb_loss = E * jnp.sum(me * ce)
+    max_load = onehot.sum(axis=1).max().astype(jnp.float32) / C
+    return out, {"lb_loss": lb_loss, "max_load": max_load}
+
+
+def init_moe_params(key, cfg: ModelConfig, dtype):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    keys = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    params = {
+        "router": dense_init(keys[0], (d, E), jnp.float32),
+        "w_gate": (jax.random.normal(keys[1], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(keys[2], (E, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (
+            jax.random.normal(keys[3], (E, f, d), jnp.float32) / math.sqrt(f)
+        ).astype(dtype),
+    }
+    if cfg.moe_dense_residual:
+        params["dense"] = init_mlp_params(keys[4], d, f, dtype)
+    return params

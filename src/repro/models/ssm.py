@@ -1,0 +1,289 @@
+"""SSM / linear-attention blocks: RWKV-6 (Finch) and Mamba-2 (SSD), plus the
+chunked gated-linear-attention primitive both reduce to.
+
+Both architectures update a per-head state with an *affine map* per token —
+``S_t = diag(a_t) · S_{t-1} + k_tᵀ v_t`` — the very monoid DABA Lite maintains
+for windowed decode (repro.core.windowed_state).  Training uses the chunked
+form: sequential scan across chunks (carrying only the (B,H,K,V) state) and
+matmul-parallel work within chunks, which cuts the state HBM traffic by the
+chunk length versus a per-token scan — this trade is one of the §Perf levers.
+
+RWKV-6 specifics: token-shift interpolation, data-dependent per-channel decay
+via a low-rank adapter (``w_t = exp(-exp(w0 + tanh(x·A)·B))``), bonus ``u``
+term, output gating, channel-mix MLP.
+Mamba-2 specifics: input-dependent Δ_t, scalar-per-head decay
+``a_t = exp(Δ_t·A)``, B/C projections (state in/out), D skip, gated output.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Gated linear attention: chunked (train) and sequential (decode / oracle)
+# ---------------------------------------------------------------------------
+
+
+def gla_sequential(r, k, v, a, state, bonus_u=None):
+    """Per-token scan oracle.  r,k,a: (B,T,H,K); v: (B,T,H,V);
+    state: (B,H,K,V).  Returns (outputs (B,T,H,V), final_state)."""
+
+    def step(s, xs):
+        rt, kt, vt, at = xs  # (B,H,K), (B,H,K), (B,H,V), (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        if bonus_u is not None:
+            # RWKV-6: o_t = r_t · (S_{t-1} + diag(u) k_tᵀv_t); decay after.
+            eff = s + bonus_u[None, :, :, None] * kv
+            o = jnp.einsum("bhk,bhkv->bhv", rt, eff)
+            s = at[..., None] * s + kv
+        else:
+            # Mamba-2 / SSD: h_t = a_t h_{t-1} + k_tᵀv_t; o_t = r_t · h_t.
+            s = at[..., None] * s + kv
+            o = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        return s, o
+
+    xs = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), (r, k, v, a))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state
+
+
+def gla_chunked(r, k, v, a, state, bonus_u=None, chunk: int = 64):
+    """Chunked GLA.  Same contract as :func:`gla_sequential`.
+
+    Within a chunk (length L, cumulative decay P_t = ∏_{j≤t} a_j):
+
+        o_t   = (r_t ⊙ P_{t-1}) · S_0  +  Σ_{j<t} [(r_t ⊙ P_{t-1}) · (k_j / P_j)] v_j
+                (+ bonus/self term)
+        S_L   = P_L ⊙ S_0 + Σ_j ((P_L / P_j) ⊙ k_j) ⊗ v_j
+
+    Numerical note: the ``k_j / P_j`` factorization assumes decays not far
+    below 1 within a chunk (true for RWKV-6/Mamba-2 operating ranges); chunk
+    length bounds the dynamic range.
+    """
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, T)
+    if T % L:
+        pad = L - T % L
+        zeros = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zeros(r), zeros(k), zeros(v)
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        Tp = T + pad
+    else:
+        Tp = T
+    nc = Tp // L
+
+    def reshape_c(x):
+        return jnp.moveaxis(
+            x.reshape(B, nc, L, H, x.shape[-1]), 1, 0
+        )  # (nc, B, L, H, ·)
+
+    rc, kc, vc, ac = map(reshape_c, (r, k, v, a))
+    causal_strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    causal_incl = jnp.tril(jnp.ones((L, L), bool))
+
+    def one_chunk(S0, xs):
+        rt, kt, vt, at = xs  # (B,L,H,·) f32
+        logp = jnp.cumsum(jnp.log(jnp.maximum(at, 1e-12)), axis=1)  # (B,L,H,K)
+        P = jnp.exp(logp)  # inclusive ∏
+        k_t = kt / jnp.maximum(P, 1e-24)
+        if bonus_u is not None:
+            # RWKV-6 reads the PRE-decay state: use P_{t-1}, strict mask,
+            # current token enters through diag(u) only.
+            P_prev = jnp.exp(logp - jnp.log(jnp.maximum(at, 1e-12)))
+            r_t = rt * P_prev
+            mask = causal_strict
+        else:
+            # Mamba-2 reads the POST-update state: inclusive P_t and j ≤ t.
+            r_t = rt * P
+            mask = causal_incl
+        inter = jnp.einsum("blhk,bhkv->blhv", r_t, S0)
+        scores = jnp.einsum("blhk,bmhk->bhlm", r_t, k_t)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        intra = jnp.einsum("bhlm,bmhv->blhv", scores, vt)
+        o = inter + intra
+        if bonus_u is not None:  # RWKV: current token through diag(u)
+            s_self = jnp.einsum("blhk,hk,blhk->blh", rt, bonus_u, kt)
+            o = o + s_self[..., None] * vt
+        PL = P[:, -1]  # (B,H,K)
+        S = PL[..., None] * S0 + jnp.einsum(
+            "blhk,blhv->bhkv", k_t * PL[:, None], vt
+        )
+        return S, o
+
+    state, outs = jax.lax.scan(one_chunk, state, (rc, kc, vc, ac))
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, Tp, H, V)
+    return outs[:, :T], state
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 layer
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.dtype
+    d, f = cfg.d_model, cfg.d_ff
+    H = cfg.num_heads
+    K = d // H
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(jnp.float32),
+        "w_r": dense_init(ks[1], (d, d), dtype),
+        "w_k": dense_init(ks[2], (d, d), dtype),
+        "w_v": dense_init(ks[3], (d, d), dtype),
+        "w_g": dense_init(ks[4], (d, d), dtype),
+        "w_o": dense_init(ks[5], (d, d), dtype),
+        # decay = exp(-exp(w0 + lora)): w0 ≈ -5 gives per-step decay ≈ 0.993,
+        # the RWKV operating range (and keeps the chunked k/P factorization
+        # well-conditioned over a 64-token chunk).
+        "decay_w0": jnp.zeros((H, K), jnp.float32) - 5.0,
+        "decay_a": dense_init(ks[6], (d, lora), jnp.float32),
+        "decay_b": dense_init(ks[7], (lora, d), jnp.float32),
+        "bonus_u": (jax.random.normal(ks[8], (H, K)) * 0.1).astype(jnp.float32),
+        "ln_x": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_mu": (jax.random.uniform(ks[9], (d,)) * 0.5 + 0.25).astype(jnp.float32),
+        "cm_k": dense_init(ks[10], (d, f), dtype),
+        "cm_v": dense_init(ks[11], (f, d), dtype, scale=1.0 / math.sqrt(f)),
+    }
+
+
+def _token_shift(x, x_last: Optional[jax.Array] = None):
+    """x: (B, T, d) → previous-token stream; x_last carries across chunks."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if x_last is not None:
+        prev = prev.at[:, 0].set(x_last)
+    return prev
+
+
+def rwkv6_time_mix(params, x, cfg: ModelConfig, state, x_last=None, chunked=True):
+    """x: (B, T, d); state: (B, H, K, K).  Returns (out, new_state, new_x_last).
+
+    Token-shift interpolation runs in the residual dtype (bf16): keeping the
+    five mix streams in f32 doubles the tensor-parallel all-reduce bytes of
+    the projections' forward+backward (measured §Perf — the f32 ARs were the
+    collective bottleneck for rwkv train_4k).  Only the decay adapter and the
+    recurrence itself stay f32."""
+    B, T, d = x.shape
+    H = cfg.num_heads
+    K = d // H
+    mu = params["mu"].astype(x.dtype)  # (5, d): r, k, v, g, w
+    prev = _token_shift(x, x_last)
+    mix = lambda i: x + mu[i] * (prev - x)
+    xr, xk, xv, xg, xw = (mix(i) for i in range(5))
+
+    r = (xr @ params["w_r"]).reshape(B, T, H, K).astype(jnp.float32)
+    k = (xk @ params["w_k"]).reshape(B, T, H, K).astype(jnp.float32)
+    v = (xv @ params["w_v"]).reshape(B, T, H, K).astype(jnp.float32)
+    g = jax.nn.silu((xg @ params["w_g"]).astype(jnp.float32))
+
+    # data-dependent decay (the Finch contribution): low-rank adapter (f32)
+    xw32 = xw.astype(jnp.float32)
+    dd = jnp.tanh(xw32 @ params["decay_a"]) @ params["decay_b"]  # (B,T,d)
+    w = params["decay_w0"][None, None] + dd.reshape(B, T, H, K)
+    a = jnp.exp(-jnp.exp(w))  # decay in (0, 1)
+
+    if chunked:
+        o, state = gla_chunked(
+            r, k, v, a, state, bonus_u=params["bonus_u"],
+            chunk=cfg.gla_chunk or 64,
+        )
+    else:
+        o, state = gla_sequential(r, k, v, a, state, bonus_u=params["bonus_u"])
+    o = o.reshape(B, T, d)
+    o = rmsnorm(o, params["ln_x"], cfg.norm_eps).astype(jnp.float32) * g
+    out = (o.astype(x.dtype) @ params["w_o"])
+    return out, state, x[:, -1].astype(jnp.float32)
+
+
+def rwkv6_channel_mix(params, x, x_last=None):
+    prev = _token_shift(x, x_last)
+    xk = x + params["cm_mu"].astype(x.dtype) * (prev - x)
+    h = jnp.square(jax.nn.relu(xk @ params["cm_k"]))
+    return h @ params["cm_v"], x[:, -1].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) layer
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or cfg.dtype
+    d, f = cfg.d_model, cfg.d_ff  # f = expanded inner dim
+    N = cfg.ssm_state
+    H = cfg.num_heads  # SSD heads over the inner dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * f), dtype),  # x and gate z
+        "w_bc": dense_init(ks[1], (f, 2 * N), dtype),  # B and C (shared groups)
+        "w_dt": dense_init(ks[2], (f, H), jnp.float32),
+        # softplus(dt_bias) ≈ 0.01: Mamba-2's Δ init range; a = exp(-Δ·A)
+        # then sits in [0.85, 0.99] so chunked cumulative decays stay sane.
+        "dt_bias": jnp.full((H,), math.log(math.expm1(0.01)), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (4, f)) * 0.2).astype(jnp.float32),
+        "w_out": dense_init(ks[4], (f, d), dtype, scale=1.0 / math.sqrt(f)),
+        "norm": jnp.zeros((f,), jnp.float32),
+    }
+
+
+def _short_conv(x, w):
+    """Depthwise causal conv along T.  x: (B,T,f); w: (k,f)."""
+    kk = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (kk - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(kk))
+    return out
+
+
+def mamba2_mix(params, x, cfg: ModelConfig, state, chunked=True):
+    """x: (B, T, d); state: (B, H, N, P) with P = f // H head dim.
+
+    Returns (out, new_state, conv_tail) where conv_tail (B, 3, f) is the raw
+    pre-conv input history needed to continue decoding after a prefill.
+    """
+    B, T, d = x.shape
+    f = params["w_in"].shape[1] // 2
+    H = cfg.num_heads
+    P = f // H
+    N = cfg.ssm_state
+
+    xz = x @ params["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # (B,T,f) each
+    xi_raw = xi.astype(jnp.float32)
+    conv_tail = jnp.pad(xi_raw, ((0, 0), (3, 0), (0, 0)))[:, -3:]
+    xi = _short_conv(xi_raw, params["conv_w"])
+    xi = jax.nn.silu(xi)
+
+    bc = xi.astype(x.dtype) @ params["w_bc"]  # (B,T,2N)
+    bmat, cmat = jnp.split(bc.astype(jnp.float32), 2, axis=-1)  # (B,T,N)
+    dt = jax.nn.softplus(xi @ params["w_dt"] + params["dt_bias"])  # (B,T,H)
+    a = jnp.exp(-dt * jnp.exp(params["a_log"]))  # (B,T,H) scalar decay/head
+
+    xh = xi.reshape(B, T, H, P)
+    v = xh * dt[..., None]  # Δ-scaled input  (B,T,H,P)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (B, T, H, N))
+    r = jnp.broadcast_to(cmat[:, :, None, :], (B, T, H, N))
+    a_vec = jnp.broadcast_to(a[..., None], (B, T, H, N))
+
+    if chunked:
+        # chunk 16 default: Mamba decays reach ~0.85/step, so shorter chunks
+        # bound the k/P dynamic range (vs 64 for RWKV's ~0.99 decays).
+        o, state = gla_chunked(r, k, v, a_vec, state, chunk=cfg.gla_chunk or 16)
+    else:
+        o, state = gla_sequential(r, k, v, a_vec, state)  # (B,T,H,P)
+    o = o + xh * params["d_skip"][None, None, :, None]
+    o = o.reshape(B, T, f)
+    o = rmsnorm(o, params["norm"], cfg.norm_eps).astype(jnp.float32)
+    o = o * jax.nn.silu(z.astype(jnp.float32))
+    return o.astype(x.dtype) @ params["w_out"], state, conv_tail

@@ -1,0 +1,221 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs_per_device   / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device   / HBM_BW
+    collective = effective_collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+FLOPs and bytes, so the prompt's ``/ chips`` is already applied.  Collective
+bytes are NOT in cost_analysis: we parse the final optimized HLO
+(``compiled.as_text()``) and sum result-shape bytes of every collective op,
+weighting all-reduce 2× (ring reduce+broadcast phases).  MODEL_FLOPS uses
+6·N·D (train) / 2·N·D (inference) with N = (active) parameter count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-type result bytes from the optimized (post-SPMD) HLO text."""
+    by_type: dict[str, dict] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        d = by_type.setdefault(op, {"count": 0, "bytes": 0})
+        # `-start/-done` pairs would double count; regex folds them to the
+        # same op name, so skip `-done` results (they repeat the shape).
+        d["count"] += 1
+        d["bytes"] += b
+    return by_type
+
+
+def effective_collective_bytes(by_type: dict) -> float:
+    """Ring-model effective wire bytes per device."""
+    total = 0.0
+    for op, d in by_type.items():
+        w = 2.0 if op == "all-reduce" else 1.0
+        total += w * d["bytes"]
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    collectives: dict
+    model_flops_total: float  # analytic useful FLOPs for the whole step
+    memory_analysis: dict
+    skipped: bool = False
+    note: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def model_flops_per_device(self) -> float:
+        return self.model_flops_total / max(self.chips, 1)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device) — remat/redundancy waste."""
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_time(self) -> float:
+        """Lower-bound step time = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / bound time: how close the step is to the
+        hardware roofline if perfectly overlapped."""
+        t = self.roofline_time
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_per_device / PEAK_FLOPS_BF16) / t
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes": self.collective_bytes,
+            "collectives": self.collectives,
+            "model_flops_total": self.model_flops_total,
+            "memory_analysis": self.memory_analysis,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "skipped": self.skipped,
+            "note": self.note,
+        }
+
+
+def gla_correction(cfg, shape) -> tuple[float, float]:
+    """(flops, bytes) missed by cost_analysis for the GLA chunk scan.
+
+    The gated-linear-attention recurrence scans over sequence chunks; XLA
+    counts its body once per layer, so (nc - 1) iterations are missing.
+    Per-chunk costs (fwd):
+        flops ≈ 2·B·H·(L²·(K+V) + 2·L·K·V)
+        bytes ≈ 4·B·L·H·(3K + 2V) + 8·B·H·K·V       (f32 activations+state)
+    Train steps include remat-recompute + backward ≈ 4× fwd flops / 3× bytes.
+    Decode shapes use the per-token sequential step (no scan) — zero
+    correction.  These terms are small for both SSM archs (< a few % of the
+    projection matmuls) but are included for honesty.
+    """
+    if not (getattr(cfg, "rwkv", False) or getattr(cfg, "mamba", False)):
+        return 0.0, 0.0
+    if shape.kind == "decode":
+        return 0.0, 0.0
+    B, T = shape.global_batch, shape.seq_len
+    H = cfg.num_heads
+    if cfg.rwkv:
+        K = V = cfg.d_model // H
+        Lc = cfg.gla_chunk or 64
+    else:
+        K = cfg.ssm_state
+        V = cfg.d_ff // H
+        Lc = cfg.gla_chunk or 16
+    nc = max(T // Lc, 1)
+    missing = max(nc - 1, 0) * cfg.num_layers
+    flops_chunk = 2.0 * B * H * (Lc * Lc * (K + V) + 2 * Lc * K * V)
+    bytes_chunk = 4.0 * B * Lc * H * (3 * K + 2 * V) + 8.0 * B * H * K * V
+    if shape.kind == "train":
+        flops_chunk *= 4.0
+        bytes_chunk *= 3.0
+    return missing * flops_chunk, missing * bytes_chunk
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs for one step of (cfg, shape).
+
+    train: 6·N_active·D;  prefill: 2·N_active·D;  decode: 2·N_active·B
+    plus attention-context FLOPs for decode (KV reads are memory-side).
+    """
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def save_roofline(r: Roofline, path: str):
+    with open(path, "w") as f:
+        json.dump(r.to_json(), f, indent=2)
+
+
+def load_roofline(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,101 @@
+"""Windowed training telemetry via DABA Lite — the paper inside the train loop.
+
+Loss and gradient-norm statistics over a sliding window of recent steps are
+maintained *inside* the jitted train step with worst-case O(1) monoid
+combines per step (Theorem 13): metric upkeep adds constant, uniform work —
+no amortized spikes perturbing step time.  Monoids used:
+
+  * variance (Welford merge)       → windowed loss mean / stddev
+  * maxcount                       → windowed grad-norm max + multiplicity
+  * max                            → windowed step-time max (host-fed)
+
+The same windowed mean/std powers straggler *detection* in the trainer: a
+step whose duration z-scores far above the window is flagged (mitigation =
+checkpoint + re-dispatch, which the fault-tolerance layer handles).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import daba_lite
+from repro.core.monoids import max_monoid, maxcount_monoid, variance_monoid
+
+PyTree = Any
+
+_LOSS_M = variance_monoid()
+_GNORM_M = maxcount_monoid()
+_TIME_M = max_monoid()
+
+
+def init_metric_windows(window: int) -> PyTree:
+    cap = window + 1
+    return {
+        "window": jnp.asarray(window, jnp.int32),
+        "loss": daba_lite.init(_LOSS_M, cap),
+        "gnorm": daba_lite.init(_GNORM_M, cap),
+        "step_time": daba_lite.init(_TIME_M, cap),
+    }
+
+
+def _slide(monoid, state, value, window):
+    state = daba_lite.insert(monoid, state, value)
+    return jax.lax.cond(
+        daba_lite.size(state) > window,
+        lambda s: daba_lite.evict(monoid, s),
+        lambda s: s,
+        state,
+    )
+
+
+def update_metric_windows(mw: PyTree, loss, grad_norm, step_time=None) -> PyTree:
+    w = mw["window"]
+    out = dict(mw)
+    out["loss"] = _slide(_LOSS_M, mw["loss"], loss, w)
+    out["gnorm"] = _slide(_GNORM_M, mw["gnorm"], grad_norm, w)
+    if step_time is not None:
+        out["step_time"] = _slide(_TIME_M, mw["step_time"], step_time, w)
+    return out
+
+
+def read_metric_windows(mw: PyTree) -> dict:
+    lq = daba_lite.query(_LOSS_M, mw["loss"])
+    gq = daba_lite.query(_GNORM_M, mw["gnorm"])
+    n = jnp.maximum(lq["n"], 1.0)
+    return {
+        "win/loss_mean": lq["mu"],
+        "win/loss_std": jnp.sqrt(lq["m2"] / n),
+        "win/gnorm_max": gq["m"],
+        "win/gnorm_max_count": gq["c"],
+        "win/steps": lq["n"].astype(jnp.int32),
+        "win/time_max": daba_lite.query(_TIME_M, mw["step_time"]),
+    }
+
+
+class TimeWindow:
+    """Host-side (eager) sliding window over step durations for straggler
+    detection — worst-case O(1) upkeep per step via DABA Lite + variance
+    monoid, so the watchdog itself never causes a latency spike."""
+
+    def __init__(self, window: int = 64):
+        self.window = window
+        self.m = variance_monoid()
+        self.state = daba_lite.init(self.m, window + 1)
+
+    def observe(self, seconds: float) -> dict:
+        self.state = daba_lite.insert(self.m, self.state, seconds)
+        if int(daba_lite.size(self.state)) > self.window:
+            self.state = daba_lite.evict(self.m, self.state)
+        q = daba_lite.query(self.m, self.state)
+        n = max(float(q["n"]), 1.0)
+        mean = float(q["mu"])
+        std = (float(q["m2"]) / n) ** 0.5
+        z = 0.0 if std < 1e-9 else (seconds - mean) / std
+        return {"mean": mean, "std": std, "zscore": z, "n": int(n)}
+
+    def is_straggler(self, seconds: float, z_threshold: float = 4.0) -> bool:
+        stats = self.observe(seconds)
+        return stats["n"] >= 8 and stats["zscore"] > z_threshold

@@ -1,0 +1,134 @@
+"""The fused training step: loss → grad → clip → AdamW → windowed telemetry.
+
+``make_train_step(cfg, optimizer)`` returns a pure function
+``(state, batch) -> (state, metrics)`` suitable for ``jax.jit`` with
+in/out shardings from distributed/sharding.py.  Optional int8 error-feedback
+gradient compression models the compressed DP all-reduce (the decompressed
+values feed the update, so numerics match the wire format).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.compression import ef_compress_tree, init_error_state
+from repro.models.common import ModelConfig
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import AdamW, AdamWState
+from repro.train.metrics import (
+    init_metric_windows,
+    read_metric_windows,
+    update_metric_windows,
+)
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: PyTree
+    opt_state: AdamWState
+    step: jax.Array
+    metric_windows: PyTree
+    compress_err: Optional[PyTree] = None
+
+
+def init_train_state(
+    cfg: ModelConfig,
+    params: PyTree,
+    optimizer: AdamW,
+    metric_window: int = 128,
+    compress: bool = False,
+) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        metric_windows=init_metric_windows(metric_window),
+        compress_err=init_error_state(params) if compress else None,
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    optimizer: AdamW,
+    compress: bool = False,
+    accum_steps: int = 1,
+):
+    """``accum_steps > 1`` splits the global batch into microbatches scanned
+    sequentially with f32 gradient accumulation — activation memory scales
+    with the microbatch while gradient/optimizer numerics are unchanged (one
+    update per step).  This is how the 4k-seq × 256-batch train shapes fit
+    16 GB/chip HBM (see EXPERIMENTS.md §Dry-run)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+
+    def train_step(state: TrainState, batch: dict):
+        if accum_steps == 1:
+            (loss, aux), grads = grads_of(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:])
+                if x.ndim >= 1 and x.shape[0] % accum_steps == 0
+                else jnp.broadcast_to(x, (accum_steps,) + x.shape),
+                batch,
+            )
+            if "positions" in batch and batch["positions"].ndim == 3:
+                # (3, B, S) → microbatch over axis 1
+                p = batch["positions"]
+                micro["positions"] = jnp.moveaxis(
+                    p.reshape(3, accum_steps, -1, p.shape[-1]), 1, 0
+                )
+
+            def one(carry, mb):
+                gsum, lsum = carry
+                (loss, _aux), g = grads_of(state.params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g
+                )
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                one, (zeros, jnp.zeros((), jnp.float32)), micro
+            )
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+
+        err = state.compress_err
+        if compress:
+            grads, err = ef_compress_tree(grads, err)
+
+        params, opt_state, stats = optimizer.update(
+            grads, state.opt_state, state.params
+        )
+        mw = update_metric_windows(
+            state.metric_windows, loss, stats["grad_norm"]
+        )
+        metrics = {
+            "loss": loss,
+            "grad_norm": stats["grad_norm"],
+            "lr": stats["lr"],
+            **read_metric_windows(mw),
+        }
+        new_state = TrainState(
+            params=params,
+            opt_state=opt_state,
+            step=state.step + 1,
+            metric_windows=mw,
+            compress_err=err,
+        )
+        return new_state, metrics
+
+    return train_step

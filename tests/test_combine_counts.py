@@ -1,0 +1,109 @@
+"""Worst-case and amortized ⊗-invocation counts — Theorems 3, 7, 10, 13.
+
+Counts are measured with an instrumented monoid in eager mode, where
+``lazy_cond`` executes exactly the branch the paper's pseudocode would.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, counting, monoids
+
+
+def run_counted(algo_name, n_ops=800, maxwin=48, seed=7):
+    algo = ALGORITHMS[algo_name]
+    m, ctr = counting(monoids.maxcount_monoid())
+    st = algo.init(m, 64)
+    r = np.random.default_rng(seed)
+    worst = {"insert": 0, "evict": 0, "query": 0}
+    total = {"insert": 0, "evict": 0, "query": 0}
+    count = {"insert": 0, "evict": 0, "query": 0}
+    sz = 0
+    for _ in range(n_ops):
+        c = r.random()
+        if sz == 0 or (c < 0.55 and sz < maxwin):
+            op, fn = "insert", lambda s: algo.insert(m, s, float(r.integers(0, 5)))
+            sz += 1
+        elif c < 0.85:
+            op, fn = "evict", lambda s: algo.evict(m, s)
+            sz -= 1
+        else:
+            op, fn = "query", lambda s: (algo.query(m, s), s)[1]
+        ctr.reset()
+        st = fn(st)
+        worst[op] = max(worst[op], ctr.count)
+        total[op] += ctr.count
+        count[op] += 1
+    avg = {k: total[k] / max(count[k], 1) for k in total}
+    return worst, avg
+
+
+def test_daba_theorem_10():
+    """DABA: ≤4 ⊗/insert, ≤3 ⊗/evict, ≤1 ⊗/query; avg 2.5 / 1.5."""
+    worst, avg = run_counted("daba")
+    assert worst["insert"] <= 4
+    assert worst["evict"] <= 3
+    assert worst["query"] <= 1
+    assert avg["insert"] <= 2.8  # 2.5 + identity-combine slack
+    assert avg["evict"] <= 1.8
+
+
+def test_daba_lite_theorem_13():
+    """DABA Lite: ≤3 ⊗/insert, ≤2 ⊗/evict, ≤1 ⊗/query; avg 2 / 1."""
+    worst, avg = run_counted("daba_lite")
+    assert worst["insert"] <= 3
+    assert worst["evict"] <= 2
+    assert worst["query"] <= 1
+    assert avg["insert"] <= 2.3
+    assert avg["evict"] <= 1.3
+
+
+@pytest.mark.parametrize("algo_name", ["two_stacks", "two_stacks_lite"])
+def test_two_stacks_theorems_3_7(algo_name):
+    """Two-Stacks(-Lite): exactly 1 ⊗/insert and /query; evict amortized O(1)
+    but worst-case O(n) — the flip latency spike DABA removes."""
+    worst, avg = run_counted(algo_name)
+    assert worst["insert"] == 1
+    assert worst["query"] == 1
+    assert worst["evict"] >= 20  # the O(n) flip happened
+    assert avg["evict"] <= 1.5  # amortized O(1)
+
+
+def test_daba_worst_case_independent_of_window():
+    """The defining property: DABA's worst case does NOT grow with n."""
+    for maxwin in [8, 64]:
+        worst_d, _ = run_counted("daba", maxwin=min(maxwin, 48))
+        assert worst_d["insert"] <= 4 and worst_d["evict"] <= 3
+    # while Two-Stacks' worst case DOES grow with n
+    w8, _ = run_counted("two_stacks", maxwin=8)
+    w48, _ = run_counted("two_stacks", maxwin=48)
+    assert w48["evict"] > w8["evict"]
+
+
+def test_space_bounds():
+    """Theorem 10 vs 13: DABA stores 2 ring buffers (vals+aggs ⇒ 2n);
+    DABA Lite stores 1 (n) + aggRA + aggB (n+2)."""
+    import jax
+
+    m = monoids.sum_monoid()
+    cap = 32
+    daba_state = ALGORITHMS["daba"].init(m, cap)
+    lite_state = ALGORITHMS["daba_lite"].init(m, cap)
+
+    def agg_slots(state, ring_names, scalar_names):
+        slots = 0
+        for name in ring_names:
+            slots += getattr(state, name).shape[0]
+        slots += len(scalar_names)
+        return slots
+
+    assert agg_slots(daba_state, ["vals", "aggs"], []) == 2 * cap
+    assert agg_slots(lite_state, ["deque"], ["agg_ra", "agg_b"]) == cap + 2
+    # two-stacks lite: n+1
+    ts_lite = ALGORITHMS["two_stacks_lite"].init(m, cap)
+    assert agg_slots(ts_lite, ["deque"], ["agg_b"]) == cap + 1
+    # two-stacks: 2n vals + 2n aggs buffers (stack arrays)
+    ts = ALGORITHMS["two_stacks"].init(m, cap)
+    n_leaves = sum(x.shape[0] for x in jax.tree.leaves(
+        (ts.f_vals, ts.f_aggs, ts.b_vals, ts.b_aggs)))
+    assert n_leaves == 4 * cap  # two stacks × (val + agg) buffers

@@ -1,0 +1,110 @@
+"""FlatFIT (paper §7 comparison algorithm): correctness + amortized counts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS, counting, flatfit, monoids
+
+CAP = 32
+
+
+def run_flatfit(m, ops, use_mut=True):
+    state = flatfit.init(m, CAP)
+    out = []
+    for kind, val in ops:
+        if kind == "i":
+            if flatfit.size(state) >= CAP - 1:
+                continue
+            state = flatfit.insert(m, state, val)
+        elif kind == "e":
+            if flatfit.size(state) == 0:
+                continue
+            state = flatfit.evict(m, state)
+        else:
+            if use_mut:
+                agg, state = flatfit.query_mut(m, state)
+            else:
+                agg = flatfit.query(m, state)
+            out.append(np.asarray(m.lower(agg)))
+    agg = flatfit.query(m, state)
+    out.append(np.asarray(m.lower(agg)))
+    return out
+
+
+def run_oracle(m, ops):
+    algo = ALGORITHMS["recalc"]
+    s = algo.init(m, CAP)
+    sz = 0
+    out = []
+    for kind, val in ops:
+        if kind == "i":
+            if sz >= CAP - 1:
+                continue
+            s = algo.insert(m, s, val)
+            sz += 1
+        elif kind == "e":
+            if sz == 0:
+                continue
+            s = algo.evict(m, s)
+            sz -= 1
+        else:
+            out.append(np.asarray(m.lower(algo.query(m, s))))
+    out.append(np.asarray(m.lower(algo.query(m, s))))
+    return out
+
+
+@pytest.mark.parametrize("use_mut", [True, False], ids=["compressing", "pure"])
+@settings(max_examples=25, deadline=None)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["i", "i", "e", "q"]),
+              st.tuples(st.integers(-99, 99), st.integers(-99, 99))),
+    min_size=1, max_size=120))
+def test_flatfit_matches_oracle(use_mut, ops):
+    m = monoids.affine_int_monoid()
+    assert all(
+        np.array_equal(a, b)
+        for a, b in zip(run_oracle(m, ops), run_flatfit(m, ops, use_mut))
+    )
+
+
+def test_flatfit_amortized_counts():
+    """Insert/evict cost 0 ⊗; compressed queries amortize to O(1); repeated
+    queries without interleaved ops cost exactly 1 re-walk of length ≤ 2."""
+    m, ctr = counting(monoids.maxcount_monoid())
+    state = flatfit.init(m, 256)
+    r = np.random.default_rng(0)
+    total, nq = 0, 0
+    sz = 0
+    worst = 0
+    for i in range(2000):
+        c = r.random()
+        if sz == 0 or (c < 0.5 and sz < 200):
+            state = flatfit.insert(m, state, float(r.integers(0, 9)))
+            sz += 1
+        elif c < 0.8:
+            state = flatfit.evict(m, state)
+            sz -= 1
+        else:
+            ctr.reset()
+            _, state = flatfit.query_mut(m, state)
+            total += ctr.count
+            worst = max(worst, ctr.count)
+            nq += 1
+    assert nq > 100
+    assert total / nq < 8.0  # amortized O(1)
+    assert worst >= 10  # ...but worst-case O(n): the paper's contrast w/ DABA
+
+
+def test_flatfit_compression_makes_requery_cheap():
+    m, ctr = counting(monoids.sum_monoid())
+    state = flatfit.init(m, 64)
+    for i in range(40):
+        state = flatfit.insert(m, state, float(i))
+    ctr.reset()
+    _, state = flatfit.query_mut(m, state)
+    first = ctr.count
+    ctr.reset()
+    _, state = flatfit.query_mut(m, state)
+    assert first >= 39  # full walk
+    assert ctr.count <= 2  # compressed: single hop to tail

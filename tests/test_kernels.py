@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.local_attention.ops import local_attention
+from repro.kernels.sliding_window.ops import sliding_window_agg
+from repro.kernels.sliding_window.ref import sliding_window_ref
+from repro.kernels.suffix_scan.ops import suffix_scan
+from repro.kernels.suffix_scan.ref import suffix_scan_ref
+
+rng = np.random.default_rng(0)
+
+SWEEP = [(4, 64, 8), (3, 100, 7), (1, 17, 17), (5, 33, 5), (2, 256, 64), (2, 80, 2)]
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "min", "logsumexp"])
+@pytest.mark.parametrize("B,T,w", SWEEP)
+def test_sliding_window_f32(op, B, T, w):
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    y = sliding_window_agg(x, w, op)
+    yr = sliding_window_ref(x, window=w, op=op)
+    assert float(jnp.abs(y - yr).max()) < 3e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.int32])
+def test_sliding_window_dtypes(dtype):
+    if dtype == jnp.int32:
+        x = jnp.asarray(rng.integers(0, 10, (4, 50)), dtype)
+    else:
+        x = jnp.asarray(rng.standard_normal((4, 64)), dtype)
+    for op in ["sum", "max"]:
+        y = sliding_window_agg(x, 6, op).astype(jnp.float32)
+        yr = sliding_window_ref(x, window=6, op=op).astype(jnp.float32)
+        if dtype == jnp.int32 or op == "max":
+            assert jnp.array_equal(y, yr), (dtype, op)
+        else:  # bf16 sum: combine-order rounding differs (scan vs shifts)
+            assert float(jnp.abs(y - yr).max()) < 0.15, (dtype, op)
+
+
+def test_sliding_window_nd_input():
+    x = jnp.asarray(rng.standard_normal((2, 3, 40)), jnp.float32)
+    y = sliding_window_agg(x, 5, "max")
+    yr = sliding_window_ref(x.reshape(6, 40), window=5, op="max").reshape(2, 3, 40)
+    assert jnp.array_equal(y, yr)
+
+
+@pytest.mark.parametrize("op", ["sum", "max", "logsumexp"])
+@pytest.mark.parametrize("B,T,bt", [(4, 64, 16), (3, 100, 32), (1, 7, 256), (5, 513, 64)])
+def test_suffix_scan(op, B, T, bt):
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    y = suffix_scan(x, op, block_t=bt)
+    yr = suffix_scan_ref(x, op=op)
+    assert float(jnp.abs(y - yr).max()) < 5e-5
+
+
+def test_suffix_scan_is_the_flip():
+    """The kernel computes exactly Two-Stacks-Lite's flip invariant:
+    deque[i] ← v_i ⊗ … ⊗ v_{n-1}."""
+    from repro.core import monoids, two_stacks_lite as tsl
+
+    m = monoids.sum_monoid()
+    st = tsl.init(m, 16)
+    vals = [1.0, 2.0, 3.0, 4.0, 5.0]
+    for v in vals:
+        st = tsl.insert(m, st, v)
+    st = tsl.evict(m, st)  # forces the flip
+    flipped = np.asarray(st.deque[1:5])  # after popFront
+    kernel = np.asarray(suffix_scan(jnp.asarray([vals]), "sum"))[0]
+    assert np.allclose(flipped, kernel[1:5])
+
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,T,D,W,cap,blk",
+    [
+        (2, 4, 2, 64, 16, 16, 0.0, 16),
+        (1, 2, 1, 100, 32, 24, 30.0, 32),
+        (2, 2, 2, 37, 8, 8, 0.0, 16),
+        (1, 4, 1, 128, 64, 128, 0.0, 32),  # window == T: full causal
+        (1, 2, 2, 48, 16, 1000, 0.0, 16),  # window > T
+    ],
+)
+def test_local_attention(B, Hq, Hkv, T, D, W, cap, blk):
+    q = jnp.asarray(rng.standard_normal((B, Hq, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Hkv, T, D)), jnp.float32)
+    o = local_attention(q, k, v, W, softcap=cap, block_q=blk, block_k=blk)
+    o_ref = local_attention(q, k, v, W, softcap=cap, use_kernel=False)
+    assert float(jnp.abs(o - o_ref).max()) < 3e-5
+
+
+def test_local_attention_matches_model_blocked_attention():
+    """Kernel ≡ the model's jnp blocked attention (the TPU/CPU pair)."""
+    from repro.models.attention import blocked_attention
+
+    B, H, T, D, W = 1, 2, 64, 16, 16
+    q = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, H, T, D)), jnp.float32)
+    o_kernel = local_attention(q, k, v, W, block_q=16, block_k=16)
+    o_model = blocked_attention(q, k, v, causal=True, window=W, q_chunk=16)
+    assert float(jnp.abs(o_kernel - o_model).max()) < 3e-5

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness assertions, and prefill→decode consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.factory import make_smoke_batch, reduced_config
+from repro.models.transformer import (
+    DecodeSpec,
+    build_model,
+    forward,
+    logits_fn,
+)
+
+KEY = jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_smoke(arch):
+    rc = reduced_config(ARCHS[arch])
+    model = build_model(rc)
+    params = model.init_params(KEY)
+    batch = make_smoke_batch(rc, KEY, B=2, S=16)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # one grad step moves the loss
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    gnorm = sum(float(jnp.sum(jnp.square(g))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes(arch):
+    rc = reduced_config(ARCHS[arch])
+    model = build_model(rc)
+    params = model.init_params(KEY)
+    batch = make_smoke_batch(rc, KEY, B=2, S=16)
+    h = forward(params, rc, {k: v for k, v in batch.items() if k != "labels"})
+    assert h.shape == (2, 16, rc.d_model)
+    logits = logits_fn(params, rc, h)
+    assert logits.shape == (2, 16, rc.padded_vocab)
+    assert bool(jnp.isfinite(logits[..., : rc.vocab_size]).all())
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_decode_consistency(arch):
+    """Greedy decode with caches ≡ full-forward recompute (per-arch).
+
+    MoE archs use a high capacity factor so the oracle doesn't drop tokens
+    (capacity-based routing differs between batched prefill and single-token
+    decode by design)."""
+    rc = reduced_config(ARCHS[arch])
+    if rc.num_experts:
+        rc = dataclasses.replace(rc, capacity_factor=8.0)
+    model = build_model(rc)
+    params = model.init_params(KEY)
+    S0, NDEC, B = 10, 3, 2
+    batch = make_smoke_batch(rc, KEY, B=B, S=S0)
+    spec = DecodeSpec(cache_len=S0 + NDEC, local_cache_len=rc.local_window, batch=B)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    logits_p, st = model.prefill(params, pre, spec)
+    assert logits_p.shape == (B, rc.padded_vocab)
+    if rc.embed_inputs:
+        # embed-input archs decode from token embeddings (frontend stub has
+        # no token ids in the prompt) — just verify the decode path runs.
+        tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+        for _ in range(2):
+            logits_p, st = model.decode_step(params, st, tok)
+            tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+        assert bool(jnp.isfinite(logits_p).all())
+        return
+    cur = batch["tokens"]
+    tok = jnp.argmax(logits_p, -1).astype(jnp.int32)
+    errs = []
+    for _ in range(NDEC):
+        cur = jnp.concatenate([cur, tok[:, None]], axis=1)
+        ld, st = model.decode_step(params, st, tok)
+        lf = logits_fn(params, rc, forward(params, rc, dict(pre, tokens=cur)))[:, -1]
+        errs.append(float(jnp.abs(ld - lf).max()))
+        tok = jnp.argmax(ld, -1).astype(jnp.int32)
+    assert max(errs) < 5e-3, errs
+
+
+def test_local_window_changes_gemma_attention():
+    """gemma2's local layers must actually mask beyond the window."""
+    rc = dataclasses.replace(
+        reduced_config(ARCHS["gemma2-27b"]), local_window=4, num_layers=2
+    )
+    model = build_model(rc)
+    params = model.init_params(KEY)
+    batch = make_smoke_batch(rc, KEY, B=1, S=12)
+    h1 = forward(params, rc, batch)
+    # perturb a token far outside every local window of the last position
+    t2 = batch["tokens"].at[0, 0].set((batch["tokens"][0, 0] + 1) % rc.vocab_size)
+    h2 = forward(params, rc, dict(batch, tokens=t2))
+    # global layers still see token 0, so hidden states differ...
+    assert float(jnp.abs(h1[0, -1] - h2[0, -1]).max()) > 0
+    # ...but with ALL layers local, the last position is unaffected
+    rc_local = dataclasses.replace(rc, attn_pattern="local")
+    h1l = forward(params, rc_local, batch)
+    h2l = forward(params, rc_local, dict(batch, tokens=t2))
+    assert float(jnp.abs(h1l[0, -1] - h2l[0, -1]).max()) == 0.0
+
+
+def test_moe_load_balance_aux():
+    from repro.models.mlp import init_moe_params, moe_block
+
+    rc = reduced_config(ARCHS["grok-1-314b"])
+    p = init_moe_params(KEY, rc, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 16, rc.d_model), jnp.float32)
+    out, aux = moe_block(p, x, rc)
+    assert out.shape == x.shape
+    assert float(aux["lb_loss"]) > 0
+    assert 0 < float(aux["max_load"]) <= 1.5
+
+
+def test_param_count_analytic_close_to_actual():
+    for arch in ["llama3.2-1b", "rwkv6-1.6b", "grok-1-314b"]:
+        rc = reduced_config(ARCHS[arch])
+        model = build_model(rc)
+        params = model.init_params(KEY)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        analytic = rc.param_count()
+        assert abs(actual - analytic) / actual < 0.30, (arch, actual, analytic)

@@ -1,0 +1,125 @@
+"""Monoid laws (associativity, identity) — hypothesis property tests."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import monoids
+
+INT_VALS = st.integers(min_value=-1000, max_value=1000)
+
+
+def tree_close(a, b, tol=1e-4):
+    import jax
+
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(
+        np.allclose(np.asarray(x), np.asarray(y), rtol=tol, atol=tol)
+        for x, y in zip(la, lb)
+    )
+
+
+CASES = [
+    ("sum_i32", monoids.sum_monoid(jnp.int32), INT_VALS, True),
+    ("max_i32", monoids.max_monoid(jnp.int32), INT_VALS, True),
+    ("min_i32", monoids.min_monoid(jnp.int32), INT_VALS, True),
+    ("maxcount", monoids.maxcount_monoid(jnp.float32),
+     st.integers(0, 10).map(float), True),
+    ("argmax", monoids.argmax_monoid(),
+     st.tuples(st.integers(0, 10).map(float), st.integers(0, 100)), True),
+    ("m4", monoids.m4_monoid(), st.integers(-50, 50).map(float), True),
+    ("affine_i32", monoids.affine_int_monoid(),
+     st.tuples(INT_VALS, INT_VALS), True),
+    ("bloom", monoids.bloom_monoid(8), st.integers(0, 10_000), True),
+    ("countmin", monoids.countmin_monoid(2, 16), st.integers(0, 10_000), True),
+    ("hll", monoids.hll_monoid(16), st.integers(0, 10_000), True),
+    ("mean", monoids.mean_monoid(), st.integers(-100, 100).map(float), False),
+    ("geomean", monoids.geomean_monoid(),
+     st.integers(1, 100).map(float), False),
+    ("variance", monoids.variance_monoid(),
+     st.integers(-20, 20).map(float), False),
+    ("logsumexp", monoids.logsumexp_monoid(),
+     st.integers(-20, 20).map(float), False),
+]
+
+
+@pytest.mark.parametrize("name,m,strat,exact", CASES, ids=[c[0] for c in CASES])
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_associativity(name, m, strat, exact, data):
+    a = m.lift(data.draw(strat))
+    b = m.lift(data.draw(strat))
+    c = m.lift(data.draw(strat))
+    left = m.combine(m.combine(a, b), c)
+    right = m.combine(a, m.combine(b, c))
+    if exact:
+        import jax
+
+        assert all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(jax.tree.leaves(left), jax.tree.leaves(right))
+        )
+    else:
+        assert tree_close(left, right)
+
+
+@pytest.mark.parametrize("name,m,strat,exact", CASES, ids=[c[0] for c in CASES])
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_identity(name, m, strat, exact, data):
+    a = m.lift(data.draw(strat))
+    assert tree_close(m.combine(m.identity(), a), a, tol=1e-6)
+    assert tree_close(m.combine(a, m.identity()), a, tol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(data=st.data())
+def test_left_inverse(data):
+    """inverse_front(lift(e) ⊗ r, lift(e)) == r for invertible monoids."""
+    for m, strat in [
+        (monoids.sum_monoid(jnp.int32), INT_VALS),
+        (monoids.mean_monoid(), st.integers(-100, 100).map(float)),
+        (monoids.countmin_monoid(2, 16), st.integers(0, 1000)),
+    ]:
+        e = m.lift(data.draw(strat))
+        r = m.lift(data.draw(strat))
+        combined = m.combine(e, r)
+        recovered = m.inverse_front(combined, e)
+        assert tree_close(recovered, r, tol=1e-5)
+
+
+def test_noncommutative_monoids_are_noncommutative():
+    """The monoids we rely on for order-sensitivity really are order-sensitive."""
+    m = monoids.affine_int_monoid()
+    a, b = m.lift((2, 3)), m.lift((5, 7))
+    ab, ba = m.combine(a, b), m.combine(b, a)
+    assert int(ab["b"]) != int(ba["b"])
+
+    am = monoids.argmax_monoid()
+    x, y = am.lift((1.0, 10)), am.lift((1.0, 20))
+    assert int(am.combine(x, y)["i"]) == 10  # tie → older wins
+    assert int(am.combine(y, x)["i"]) == 20
+
+
+def test_bloom_membership():
+    m = monoids.bloom_monoid(16)
+    filt = m.identity()
+    for v in [3, 17, 99]:
+        filt = m.combine(filt, m.lift(v))
+    for v in [3, 17, 99]:
+        assert bool(monoids.bloom_contains(filt, jnp.asarray(v)))
+    misses = sum(
+        bool(monoids.bloom_contains(filt, jnp.asarray(v))) for v in range(1000, 1100)
+    )
+    assert misses < 10  # false-positive rate sanity
+
+
+def test_countmin_estimate():
+    m = monoids.countmin_monoid(4, 64)
+    sk = m.identity()
+    for v, n in [(5, 3), (9, 1)]:
+        for _ in range(n):
+            sk = m.combine(sk, m.lift(v))
+    assert int(monoids.countmin_estimate(sk, 5)) >= 3
+    assert int(monoids.countmin_estimate(sk, 9)) >= 1

@@ -1,0 +1,103 @@
+"""jit / vmap / scan compatibility: traced execution ≡ eager execution."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, GENERAL_ALGORITHMS, monoids
+from repro.core.batched import BatchedSWAG
+
+
+@pytest.mark.parametrize("algo_name", sorted(GENERAL_ALGORITHMS))
+def test_jit_matches_eager(algo_name):
+    algo = ALGORITHMS[algo_name]
+    m = monoids.maxcount_monoid()
+    ins = jax.jit(lambda s, v: algo.insert(m, s, v))
+    evi = jax.jit(lambda s: algo.evict(m, s))
+    qry = jax.jit(lambda s: algo.query(m, s))
+    s_j, s_e = algo.init(m, 16), algo.init(m, 16)
+    r = np.random.default_rng(0)
+    sz = 0
+    for _ in range(120):
+        c = r.random()
+        if sz == 0 or (c < 0.55 and sz < 12):
+            v = jnp.float32(r.integers(0, 6))
+            s_j, s_e = ins(s_j, v), algo.insert(m, s_e, v)
+            sz += 1
+        else:
+            s_j, s_e = evi(s_j), algo.evict(m, s_e)
+            sz -= 1
+        qj, qe = qry(s_j), algo.query(m, s_e)
+        assert float(qj["m"]) == float(qe["m"])
+        assert int(qj["c"]) == int(qe["c"])
+
+
+@pytest.mark.parametrize("algo_name", ["daba", "daba_lite", "two_stacks_lite"])
+def test_scan_sliding_window(algo_name):
+    """lax.scan count-based sliding window ≡ numpy oracle."""
+    algo = ALGORITHMS[algo_name]
+    m = monoids.max_monoid()
+    W = 8
+
+    def step(st, x):
+        st = algo.insert(m, st, x)
+        st = jax.lax.cond(
+            algo.size(st) > W, lambda s: algo.evict(m, s), lambda s: s, st
+        )
+        return st, algo.query(m, st)
+
+    xs = jnp.asarray(np.random.default_rng(3).standard_normal(150), jnp.float32)
+    _, ys = jax.lax.scan(step, algo.init(m, W + 4), xs)
+    ref = np.array(
+        [np.asarray(xs)[max(0, t - W + 1): t + 1].max() for t in range(150)],
+        np.float32,
+    )
+    assert np.array_equal(np.asarray(ys), ref)
+
+
+@pytest.mark.parametrize("algo_name", ["daba_lite", "daba", "two_stacks"])
+def test_batched_swag(algo_name):
+    b = BatchedSWAG(ALGORITHMS[algo_name], monoids.sum_monoid(), 16)
+    st = b.init(5)
+    xs = jnp.asarray(
+        np.random.default_rng(1).standard_normal((40, 5)), jnp.float32
+    )
+    st, ys = jax.jit(lambda st, xs: b.stream(st, xs, 6))(st, xs)
+    x = np.asarray(xs)
+    ref = np.stack(
+        [[x[max(0, t - 5): t + 1, l].sum() for l in range(5)] for t in range(40)]
+    )
+    assert np.allclose(np.asarray(ys), ref, atol=1e-4)
+
+
+def test_batched_ragged_lanes():
+    """Masked per-lane step: lanes slide at different phases."""
+    b = BatchedSWAG(ALGORITHMS["daba_lite"], monoids.sum_monoid(), 16)
+    st = b.init(3)
+    vals = jnp.asarray([1.0, 10.0, 100.0])
+    st = b.insert(st, vals)
+    st = b.insert(st, vals)
+    # evict only lane 1
+    st = b.step(st, vals, jnp.array([False, False, False]),
+                jnp.array([False, True, False]))
+    q = np.asarray(b.query(st))
+    assert np.allclose(q, [2.0, 10.0, 200.0])
+    assert list(np.asarray(b.size(st))) == [2, 1, 2]
+
+
+def test_pointer_rebase_long_stream():
+    """Ring pointers survive many wraps (logical pointers are monotone)."""
+    algo = ALGORITHMS["daba_lite"]
+    m = monoids.sum_monoid(jnp.int32)
+
+    def step(st, x):
+        st = algo.insert(m, st, x)
+        st = jax.lax.cond(
+            algo.size(st) > 4, lambda s: algo.evict(m, s), lambda s: s, st
+        )
+        return st, algo.query(m, st)
+
+    xs = jnp.ones((5000,), jnp.int32)
+    _, ys = jax.lax.scan(step, algo.init(m, 8), xs)
+    assert int(ys[-1]) == 4

@@ -1,0 +1,118 @@
+"""Property tests: every SWAG algorithm ≡ recalculate-from-scratch oracle
+under arbitrary insert/evict/query interleavings (hypothesis-driven).
+
+Uses the exact-arithmetic affine_i32 monoid (non-commutative, non-invertible,
+wraparound int32 ⇒ bit-exact associativity), so oracle equality is asserted
+bitwise — any ordering or pointer bug fails loudly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ALGORITHMS, GENERAL_ALGORITHMS, monoids
+
+CAP = 24
+
+
+def ops_strategy():
+    """Sequences of (op, value) with a bounded window, arbitrary interleaving."""
+
+    return st.lists(
+        st.tuples(st.sampled_from(["i", "i", "i", "e", "q"]),
+                  st.tuples(st.integers(-99, 99), st.integers(-99, 99))),
+        min_size=1, max_size=120,
+    )
+
+
+def run(algo, m, ops, lower):
+    st_ = algo.init(m, CAP)
+    sz = 0
+    out = []
+    for kind, val in ops:
+        if kind == "i":
+            if sz >= CAP - 1:
+                continue
+            st_ = algo.insert(m, st_, val)
+            sz += 1
+        elif kind == "e":
+            if sz == 0:
+                continue
+            st_ = algo.evict(m, st_)
+            sz -= 1
+        else:
+            out.append(np.asarray(lower(algo.query(m, st_))))
+    out.append(np.asarray(lower(algo.query(m, st_))))
+    return out
+
+
+@pytest.mark.parametrize("algo_name", sorted(GENERAL_ALGORITHMS))
+@settings(max_examples=25, deadline=None)
+@given(ops=ops_strategy())
+def test_matches_oracle_affine(algo_name, ops):
+    m = monoids.affine_int_monoid()
+    ref = run(ALGORITHMS["recalc"], m, ops, m.lower)
+    got = run(ALGORITHMS[algo_name], m, ops, m.lower)
+    for i, (a, b) in enumerate(zip(ref, got)):
+        assert np.array_equal(a, b), f"query #{i}: {a} != {b}"
+
+
+@pytest.mark.parametrize("algo_name", sorted(ALGORITHMS))
+@settings(max_examples=15, deadline=None)
+@given(ops=ops_strategy())
+def test_matches_oracle_sum(algo_name, ops):
+    m = monoids.sum_monoid(jnp.int32)
+    ops = [(k, v[0]) for k, v in ops]
+    ref = run(ALGORITHMS["recalc"], m, ops, m.lower)
+    got = run(ALGORITHMS[algo_name], m, ops, m.lower)
+    for a, b in zip(ref, got):
+        assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("algo_name", sorted(GENERAL_ALGORITHMS))
+def test_maxcount_paper_trace(algo_name):
+    """The paper's §2.3 running example trace, verbatim."""
+    m = monoids.maxcount_monoid()
+    algo = ALGORITHMS[algo_name]
+    s = algo.init(m, 16)
+    for v in [4.0, 5.0, 3.0, 4.0, 0.0, 4.0, 4.0]:
+        s = algo.insert(m, s, v)
+    q = algo.query(m, s)
+    assert float(q["m"]) == 5.0 and int(q["c"]) == 1
+    s = algo.evict(m, s)  # drop 4 → max 5 × 1
+    q = algo.query(m, s)
+    assert float(q["m"]) == 5.0 and int(q["c"]) == 1
+    s = algo.evict(m, s)  # drop 5 → max 4 × 3 (non-invertible step!)
+    q = algo.query(m, s)
+    assert float(q["m"]) == 4.0 and int(q["c"]) == 3
+    s = algo.insert(m, s, 2.0)
+    q = algo.query(m, s)
+    assert float(q["m"]) == 4.0 and int(q["c"]) == 3
+    s = algo.insert(m, s, 6.0)
+    q = algo.query(m, s)
+    assert float(q["m"]) == 6.0 and int(q["c"]) == 1
+
+
+@pytest.mark.parametrize("algo_name", sorted(GENERAL_ALGORITHMS))
+def test_fill_and_drain(algo_name):
+    """The paper's dynamic-window pattern (§7.2): fill to n, drain to 0."""
+    m = monoids.affine_int_monoid()
+    algo = ALGORITHMS[algo_name]
+    oracle = ALGORITHMS["recalc"]
+    s, so = algo.init(m, CAP), oracle.init(m, CAP)
+    for n in [1, 5, CAP - 1]:
+        for i in range(n):
+            v = (i + 1, 2 * i - 3)
+            s, so = algo.insert(m, s, v), oracle.insert(m, so, v)
+            assert np.array_equal(
+                np.asarray(m.lower(algo.query(m, s))),
+                np.asarray(m.lower(oracle.query(m, so))),
+            )
+        for _ in range(n):
+            s, so = algo.evict(m, s), oracle.evict(m, so)
+            assert np.array_equal(
+                np.asarray(m.lower(algo.query(m, s))),
+                np.asarray(m.lower(oracle.query(m, so))),
+            )

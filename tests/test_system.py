@@ -1,0 +1,167 @@
+"""End-to-end system tests: the full stack wired together.
+
+1. Streaming analytics: SWAG windows over a live data stream (the paper's
+   use case) with dedup + normalization stats.
+2. Train → checkpoint → resume → serve: a tiny LM end to end, with windowed
+   telemetry maintained by DABA Lite inside the jitted step.
+3. Serving engine: continuous batching matches standalone greedy decode.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import daba_lite, monoids
+from repro.data.stream import SyntheticStream, WindowedStreamStats
+from repro.models.factory import make_smoke_batch, reduced_config
+from repro.models.transformer import DecodeSpec, build_model
+from repro.optim.adamw import AdamW, warmup_cosine
+from repro.serve.engine import DecodeEngine, Request
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_streaming_analytics_pipeline():
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    stream = SyntheticStream(cfg, batch=2, seq=32, seed=0)
+    stats = WindowedStreamStats(window=4)
+    seen = []
+    for step in range(8):
+        batch = stream.batch_at(step)
+        snap = stats.observe_batch(batch["tokens"], doc_id=step)
+        seen.append(snap)
+    # windowed min/max/mean are finite and ordered
+    s = seen[-1]
+    assert s["win_tok_min"] <= s["win_tok_mean"] <= s["win_tok_max"]
+    # dedup: recent docs hit the windowed bloom
+    assert stats.seen_recently(7) and stats.seen_recently(5)
+
+
+def test_train_checkpoint_resume_serve(tmp_path):
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    tcfg = TrainerConfig(
+        total_steps=8, ckpt_every=4, ckpt_dir=str(tmp_path),
+        metric_window=8, log_every=2,
+    )
+    stream = SyntheticStream(cfg, batch=2, seq=16, seed=1)
+    opt = AdamW(learning_rate=warmup_cosine(1e-3, 2, 8))
+    trainer = Trainer(cfg, tcfg, opt, stream)
+    state = trainer.run(trainer.fresh_state(jax.random.key(0)))
+    assert int(state.step) == 8
+
+    # resume continues from the checkpoint
+    trainer2 = Trainer(cfg, tcfg, opt, stream)
+    state2 = trainer2.resume_or_init(jax.random.key(0))
+    assert int(state2.step) == 8
+
+    # serve with the trained params
+    eng = DecodeEngine(cfg, state.params, batch_slots=2, cache_len=32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6).astype(np.int32),
+                max_new=4)
+        for i in range(3)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(30):
+        if eng.step() == 0 and not eng.queue:
+            break
+    assert all(r.done and len(r.out) == 4 for r in reqs)
+
+
+def test_engine_matches_standalone_decode():
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = DecodeEngine(cfg, params, batch_slots=2, cache_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                           int(rng.integers(4, 12))).astype(np.int32),
+                max_new=6)
+        for i in range(5)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(80):
+        if eng.step() == 0 and not eng.queue:
+            break
+    assert all(r.done for r in reqs)
+    r0 = reqs[0]
+    spec = DecodeSpec(cache_len=64, local_cache_len=cfg.local_window, batch=1)
+    lg, st = model.prefill(params, {"tokens": jnp.asarray(r0.prompt[None])}, spec)
+    toks = [int(jnp.argmax(lg[0]))]
+    for _ in range(5):
+        lg, st = model.decode_step(params, st, jnp.asarray([toks[-1]], jnp.int32))
+        toks.append(int(jnp.argmax(lg[0])))
+    assert toks == r0.out
+
+
+def test_windowed_telemetry_is_exact():
+    """The in-train-step DABA-Lite loss window ≡ numpy over the same values."""
+    from repro.train.metrics import (
+        init_metric_windows,
+        read_metric_windows,
+        update_metric_windows,
+    )
+
+    mw = init_metric_windows(window=4)
+    losses = [3.0, 2.5, 2.8, 2.0, 1.5, 9.0, 1.0]
+    gnorms = [1.0, 1.1, 0.9, 5.0, 0.8, 0.7, 5.0]
+    for l, g in zip(losses, gnorms):
+        mw = update_metric_windows(mw, jnp.float32(l), jnp.float32(g))
+    out = read_metric_windows(mw)
+    last4_l = np.array(losses[-4:])
+    last4_g = np.array(gnorms[-4:])
+    assert abs(float(out["win/loss_mean"]) - last4_l.mean()) < 1e-5
+    assert abs(float(out["win/loss_std"]) - last4_l.std()) < 1e-4
+    assert float(out["win/gnorm_max"]) == last4_g.max()
+    # 5.0 occurs twice in the window — the maxcount monoid counts both
+    assert int(out["win/gnorm_max_count"]) == int((last4_g == last4_g.max()).sum()) == 2
+    assert int(out["win/steps"]) == 4
+
+
+def test_event_time_window():
+    """Variable-sized (event-time) windows: the SWAG ADT supports arbitrary
+    insert/evict interleaving (paper §7.3) — here driven by timestamps."""
+    m = monoids.variance_monoid()
+    st = daba_lite.init(m, 64)
+    rng = np.random.default_rng(0)
+    times = np.cumsum(rng.exponential(1.0, 100))
+    vals = rng.standard_normal(100)
+    tau = 10.0
+    buf = []
+    for t, v in zip(times, vals):
+        st = daba_lite.insert(m, st, float(v))
+        buf.append((t, v))
+        while buf and buf[0][0] < t - tau:
+            st = daba_lite.evict(m, st)
+            buf.pop(0)
+        q = daba_lite.query(m, st)
+        ref = np.array([b[1] for b in buf])
+        assert abs(float(q["mu"]) - ref.mean()) < 1e-4
+        assert int(q["n"]) == len(ref)
+
+
+def test_grad_accumulation_matches_full_batch():
+    """accum_steps=2 train step ≡ accum_steps=1 on the same global batch."""
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    opt = AdamW(learning_rate=1e-3)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    batch = make_smoke_batch(cfg, jax.random.key(1), B=4, S=16)
+    s1 = init_train_state(cfg, params, opt, metric_window=8)
+    s2 = init_train_state(cfg, params, opt, metric_window=8)
+    st1, m1 = jax.jit(make_train_step(cfg, opt, accum_steps=1))(s1, batch)
+    st2, m2 = jax.jit(make_train_step(cfg, opt, accum_steps=2))(s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-4
+    err = max(
+        float(jnp.abs(a - b).max())
+        for a, b in zip(jax.tree.leaves(st1.params), jax.tree.leaves(st2.params))
+    )
+    assert err < 1e-4, err

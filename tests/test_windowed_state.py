@@ -1,0 +1,72 @@
+"""Windowed SSM/linear-attention state cells (the beyond-paper serving path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.windowed_state import (
+    ChunkedWindowedStateCell,
+    WindowedStateCell,
+    reference_windowed_state,
+)
+
+
+def _rand(seed, T, H, K, V):
+    rng = np.random.default_rng(seed)
+    decays = jnp.asarray(rng.uniform(0.6, 1.0, (T, H, K, 1)), jnp.float32)
+    updates = jnp.asarray(rng.standard_normal((T, H, K, V)), jnp.float32)
+    return decays, updates
+
+
+@pytest.mark.parametrize("W", [1, 3, 7])
+def test_windowed_state_vs_oracle(W):
+    T, H, K, V = 25, 2, 4, 3
+    decays, updates = _rand(0, T, H, K, V)
+    cell = WindowedStateCell(H, K, V, W)
+    state, outs = jax.jit(cell.prefill)(cell.init(), decays, updates)
+    ref = reference_windowed_state(decays, updates, W)
+    assert float(jnp.abs(outs - ref).max()) < 1e-4
+
+
+def test_windowed_state_evicts_exactly():
+    """After W tokens of zero-update, the window state must be exactly 0 —
+    impossible with inverse-based approaches when decay underflows."""
+    H, K, V, W = 1, 2, 2, 4
+    cell = WindowedStateCell(H, K, V, W)
+    st = cell.init()
+    # big burst, then decay-0 tokens with zero updates
+    st, _ = cell.update(st, jnp.ones((H, K, 1)), jnp.full((H, K, V), 100.0))
+    for _ in range(W):
+        st, out = cell.update(st, jnp.zeros((H, K, 1)), jnp.zeros((H, K, V)))
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_chunked_windowed_state():
+    """Coarse-grained window ≡ exact window at chunk-aligned positions."""
+    T, H, K, V = 48, 2, 3, 2
+    chunk, wc = 4, 3  # window = 12 tokens at chunk granularity
+    decays, updates = _rand(1, T, H, K, V)
+    cell = ChunkedWindowedStateCell(H, K, V, chunk, wc)
+    st = cell.init()
+    outs = []
+    for t in range(T):
+        st, o = cell.update(st, decays[t], updates[t])
+        outs.append(o)
+    outs = jnp.stack(outs)
+    # at positions where a chunk just completed (t+1 ≡ 0 mod chunk), the
+    # covered window is exactly the last wc*chunk tokens
+    ref = reference_windowed_state(decays, updates, wc * chunk)
+    for t in range(chunk * wc - 1, T, chunk):
+        err = float(jnp.abs(outs[t] - ref[t]).max())
+        assert err < 1e-4, (t, err)
+
+
+def test_chunked_cell_is_jittable():
+    H, K, V = 1, 2, 2
+    cell = ChunkedWindowedStateCell(H, K, V, chunk=4, window_chunks=2)
+    st = cell.init()
+    step = jax.jit(cell.update)
+    for t in range(20):
+        st, o = step(st, jnp.full((H, K, 1), 0.9), jnp.ones((H, K, V)))
+    assert bool(jnp.isfinite(o).all())

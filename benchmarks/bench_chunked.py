@@ -1,0 +1,83 @@
+"""Chunked bulk engine vs per-element stream: the throughput of §8.2 in bulk.
+
+Same (T, B) stream, same count-based window, two engines:
+
+  * ``per_element``: ``BatchedSWAG.stream`` with the ``lax.scan`` path —
+    worst-case O(1) combines per element, but one sequential dispatch per
+    element;
+  * ``chunked``: :class:`repro.core.chunked.ChunkedStream` — the Pallas
+    sliding_window/suffix_scan kernels amortize the whole chunk into ~3
+    combines per element of log-depth vector work.
+
+Rows use the bench_throughput.py CSV style:
+``chunked,<op>,<engine>,window=<w>,items_per_s=<n>``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ALGORITHMS, monoids
+from repro.core.batched import BatchedSWAG
+from repro.core.chunked import ChunkedStream
+
+OPERATORS = {
+    "sum": lambda: monoids.sum_monoid(),
+    "max": lambda: monoids.max_monoid(),
+}
+
+
+def _stream(T, B, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).uniform(0, 97, (T, B)).astype(np.float32)
+    )
+
+
+def per_element_throughput(monoid, window, T, B, algo_name="daba_lite", repeats=2):
+    b = BatchedSWAG(ALGORITHMS[algo_name], monoid, window + 4)
+    xs = _stream(T, B)
+    run = jax.jit(lambda st, xs: b.stream(st, xs, window, chunked=False)[1])
+    ys = run(b.init(B), xs)  # compile + warm
+    jax.block_until_ready(ys)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(run(b.init(B), xs))
+    return repeats * T * B / (time.perf_counter() - t0)
+
+
+def chunked_throughput(monoid, window, T, B, chunk=None, repeats=2):
+    eng = ChunkedStream(monoid, window, chunk)
+    xs = _stream(T, B)
+    jax.block_until_ready(eng.stream(xs))  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(eng.stream(xs))
+    return repeats * T * B / (time.perf_counter() - t0)
+
+
+def main(window=1024, T=100_000, B=8, operators=("sum",), pe_T=20_000):
+    """``pe_T``: the per-element path is timed on a truncated stream and
+    scaled — 100k sequential scan steps would dominate the benchmark run
+    while measuring the same per-item cost."""
+    rows = []
+    for op_name in operators:
+        monoid = OPERATORS[op_name]()
+        thr_pe = per_element_throughput(monoid, window, min(T, pe_T), B)
+        thr_ch = chunked_throughput(monoid, window, T, B)
+        for eng, thr in [("per_element", thr_pe), ("chunked", thr_ch)]:
+            rows.append(
+                f"chunked,{op_name},{eng},window={window},items_per_s={thr:.0f}"
+            )
+            print(rows[-1], flush=True)
+        speedup = thr_ch / thr_pe
+        rows.append(f"chunked,{op_name},speedup,window={window},x={speedup:.1f}")
+        print(rows[-1], flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

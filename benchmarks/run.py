@@ -9,6 +9,7 @@ run's output.
   Fig 11 → bench_dynamic      fill-and-drain dynamic windows
   Fig 12 → bench_eventtime    event-time windows, bursty stream
   §2.1   → bench_batched      SIMD/vmap batched SWAG (beyond paper)
+  §8.2   → bench_chunked      chunked bulk engine vs per-element stream
   §Roofline → roofline_table  rendered from experiments/dryrun/*.json
 """
 
@@ -18,7 +19,8 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: latency,throughput,dynamic,eventtime,batched,roofline")
+                    help="comma list: latency,throughput,dynamic,eventtime,"
+                         "batched,chunked,roofline")
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
@@ -28,6 +30,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_batched,
+        bench_chunked,
         bench_dynamic,
         bench_eventtime,
         bench_latency,
@@ -62,6 +65,12 @@ def main() -> None:
             bench_batched.main(batches=(16,), steps=4000)
         else:
             bench_batched.main()
+    if on("chunked"):
+        print("# §8.2 — chunked bulk engine vs per-element stream")
+        if args.quick:
+            bench_chunked.main(window=2**8, T=20_000, B=4, pe_T=5_000)
+        else:
+            bench_chunked.main()
     if on("roofline"):
         print("# §Roofline — dry-run derived table")
         roofline_table.main()

@@ -4,7 +4,10 @@ aggregation (DABA / DABA Lite) and the algorithm family it belongs to.
 Modules
 -------
 monoids          lift/combine/lower aggregation framework (paper §2.2)
-swag_base        functional-state machinery shared by all algorithms
+swag_base        functional-state machinery shared by all algorithms, plus
+                 the bulk-op protocol (insert_bulk/evict_bulk: every
+                 algorithm accepts whole chunks; two_stacks_lite and
+                 daba_lite have specialized amortized implementations)
 recalc           recalculate-from-scratch baseline (O(n) query)
 soe              subtract-on-evict baseline (invertible monoids only)
 two_stacks       amortized O(1) / worst-case O(n), 2n space (paper §3)
@@ -12,11 +15,20 @@ two_stacks_lite  amortized O(1) / worst-case O(n), n+1 space (paper §4)
 flatfit          amortized O(1) index traverser (paper §7 baseline; eager)
 daba             worst-case O(1), 2n space (paper §5)
 daba_lite        worst-case O(1), n+2 space (paper §6) — headline algorithm
-batched          vmapped multi-window SWAG, shardable over meshes
-windowed_state   sliding-window SSM/linear-attention state via DABA Lite
+batched          vmapped multi-window SWAG, shardable over meshes; stream()
+                 auto-routes large streams through the chunked engine
+chunked          ChunkedStream: chunk-at-a-time bulk streaming engine
+                 (paper §8.2 coarse-grained direction) — intra-chunk outputs
+                 from the sliding_window/suffix_scan Pallas kernels (scalar
+                 monoids from kernels/ops_registry) or generic associative
+                 scans (any pytree monoid), cross-chunk via a suffix-tail
+                 carry; ~3 combines/element independent of window
+windowed_state   sliding-window SSM/linear-attention state via DABA Lite;
+                 ChunkedWindowedStateCell.prefill consumes whole chunks
 """
 
 from repro.core import (
+    chunked,
     daba,
     daba_lite,
     flatfit,
@@ -28,7 +40,7 @@ from repro.core import (
     two_stacks_lite,
 )
 from repro.core.monoids import Monoid, counting, get_monoid, available_monoids
-from repro.core.swag_base import SWAG
+from repro.core.swag_base import SWAG, evict_bulk, insert_bulk
 
 ALGORITHMS = {
     "recalc": recalc,
@@ -57,6 +69,8 @@ __all__ = [
     "counting",
     "get_monoid",
     "available_monoids",
+    "insert_bulk",
+    "evict_bulk",
     "ALGORITHMS",
     "GENERAL_ALGORITHMS",
     "CONSTANT_TIME_ALGORITHMS",

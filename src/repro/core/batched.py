@@ -21,14 +21,21 @@ of fill/slide (dynamic windows per lane).
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import swag_base
 from repro.core.monoids import Monoid
 
 PyTree = Any
+
+# stream() auto-routes through the chunked bulk engine at or above this many
+# steps (when the initial state is concretely empty); below it the per-element
+# scan's lower constant cost wins.
+CHUNKED_AUTO_MIN_T = 2048
 
 
 class BatchedSWAG:
@@ -44,6 +51,15 @@ class BatchedSWAG:
         self.algo = algo
         self.monoid = monoid
         self.capacity = capacity
+        self._chunked_engines = {}  # (window, chunk) -> ChunkedStream
+        # jitted final-state rebuild for the chunked path (jit caches per
+        # input shape; values have (k, batch) leading -> vmap over axis 1)
+        self._bulk_insert = jax.jit(
+            jax.vmap(
+                functools.partial(swag_base.insert_bulk, algo, monoid),
+                in_axes=(0, 1),
+            )
+        )
 
         def _step(state, value, do_insert, do_evict):
             """Masked per-lane step: optionally insert, then optionally evict."""
@@ -89,11 +105,37 @@ class BatchedSWAG:
     def size(self, state: PyTree) -> jax.Array:
         return self._size(state)
 
-    def stream(self, state: PyTree, xs: PyTree, window: int):
+    def stream(
+        self,
+        state: PyTree,
+        xs: PyTree,
+        window: int,
+        *,
+        chunked: Optional[bool] = None,
+        chunk: Optional[int] = None,
+    ):
         """Scan a (T, batch, …) stream through fixed-size-``window`` sliding
         aggregation; returns (final_state, (T, batch) queries).  The standard
         count-based window: insert, evict once size exceeds ``window``.
+
+        Routing: by default (``chunked=None``) streams with T ≥
+        ``CHUNKED_AUTO_MIN_T`` starting from a concretely-empty state go
+        through the :class:`~repro.core.chunked.ChunkedStream` bulk engine
+        (Pallas kernels / associative scans, ~3 combines per element);
+        everything else — small T, traced state under jit, warm state — takes
+        the per-element ``lax.scan``.  ``chunked=True`` forces the bulk path
+        (the caller asserts the initial state is empty); ``chunked=False``
+        forces per-element.  Outputs agree exactly for integer monoids and up
+        to combine reassociation for floats; the bulk path's final state is
+        rebuilt from the last ``window`` inputs via ``insert_bulk`` — a valid
+        state with identical window contents (and therefore identical query
+        results and future behaviour), not a bit-identical internal layout.
         """
+        T = jax.tree.leaves(xs)[0].shape[0]
+        if chunked is None:
+            chunked = T >= CHUNKED_AUTO_MIN_T and self._is_concretely_empty(state)
+        if chunked:
+            return self._stream_chunked(state, xs, window, chunk)
 
         def scan_step(st, x):
             st = self._insert(st, x)
@@ -106,3 +148,26 @@ class BatchedSWAG:
             return st, self._query(st)
 
         return jax.lax.scan(scan_step, state, xs)
+
+    def _is_concretely_empty(self, state: PyTree) -> bool:
+        try:
+            return bool((np.asarray(self.size(state)) == 0).all())
+        except (jax.errors.TracerArrayConversionError, jax.errors.ConcretizationTypeError):
+            return False  # traced under jit: stay on the per-element path
+
+    def _stream_chunked(self, state: PyTree, xs: PyTree, window: int, chunk):
+        from repro.core.chunked import ChunkedStream  # local: avoid cycle
+
+        key = (window, chunk)
+        engine = self._chunked_engines.get(key)
+        if engine is None:  # cache: the engine holds the jitted chunk fn
+            engine = self._chunked_engines[key] = ChunkedStream(
+                self.monoid, window, chunk
+            )
+        ys = engine.stream(xs)
+        # Final state: the window holds the last min(T, window) inputs.
+        T = jax.tree.leaves(xs)[0].shape[0]
+        n = min(T, window)
+        last = jax.tree.map(lambda a: a[T - n:], xs)
+        state = self._bulk_insert(state, last)
+        return state, ys

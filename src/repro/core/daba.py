@@ -26,6 +26,8 @@ In eager mode only the taken case executes (counts match Theorem 10); under
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.core.monoids import Monoid
@@ -54,13 +56,7 @@ class DabaState:
     capacity: int
 
 
-def _replace(state: DabaState, **kw) -> DabaState:
-    fields = dict(
-        vals=state.vals, aggs=state.aggs, f=state.f, l=state.l, r=state.r,
-        a=state.a, b=state.b, e=state.e, capacity=state.capacity,
-    )
-    fields.update(kw)
-    return DabaState(**fields)
+_replace = dataclasses.replace  # @swag_state states are frozen dataclasses
 
 
 def init(monoid: Monoid, capacity: int) -> DabaState:

@@ -51,11 +51,23 @@ def lazy_cond(pred, true_fn: Callable, false_fn: Callable, *operands):
 
 
 def lazy_fori(lo, hi, body: Callable, init):
-    """``lax.fori_loop`` that runs a Python loop when bounds are concrete."""
+    """``lax.fori_loop`` that runs a Python loop when everything is concrete.
+
+    The Python loop gives the paper's eager sequential semantics (exact
+    ⊗-counts).  When the CARRY is traced (under jit/vmap) a Python loop would
+    unroll ``hi - lo`` copies of the body into the trace — an enormous graph
+    and, under eager vmap, per-op dispatch — so tracers anywhere route to
+    ``lax.fori_loop`` even with concrete bounds.
+    """
+    traced_carry = any(
+        isinstance(leaf, jax.core.Tracer) for leaf in jax.tree.leaves(init)
+    )
     try:
         lo_c, hi_c = int(lo), int(hi)
     except (jax.errors.TracerBoolConversionError, jax.errors.ConcretizationTypeError, TypeError):
         return jax.lax.fori_loop(lo, hi, body, init)
+    if traced_carry:
+        return jax.lax.fori_loop(lo_c, hi_c, body, init)
     carry = init
     for i in range(lo_c, hi_c):
         carry = body(i, carry)
@@ -88,6 +100,97 @@ def ring_set(buf: PyTree, ptr, elem: PyTree, capacity: int) -> PyTree:
 
 def i32(x) -> jax.Array:
     return jnp.asarray(x, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Bulk-op protocol (chunked streaming; cf. Tangwongsan et al., arXiv
+# 2307.11210 on efficient bulk insertions/evictions)
+# ---------------------------------------------------------------------------
+#
+# Every algorithm supports
+#
+#     state = insert_bulk(algo, monoid, state, values)   # values: (k, ...) In
+#     state = evict_bulk(algo, monoid, state, k)
+#
+# semantically equal to k sequential ``insert``/``evict`` calls (floats may
+# differ by combine reassociation; exact for integer monoids).  Algorithms may
+# export their own ``insert_bulk(monoid, state, values)`` /
+# ``evict_bulk(monoid, state, k)`` with amortized shortcuts (two_stacks_lite,
+# daba_lite); everything else conforms through the ``lazy_fori`` fallbacks
+# below.  The chunk length k must be static, and — as with per-element
+# inserts — ``size + k`` must not exceed the ring capacity.
+
+
+def chunk_length(values: PyTree) -> int:
+    """Static leading length of a stacked chunk of inputs."""
+    return jax.tree.leaves(values)[0].shape[0]
+
+
+def tree_index(tree: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def lift_chunk(monoid: Monoid, values: PyTree) -> PyTree:
+    """Vectorized ``lift`` over the leading (chunk) axis."""
+    return jax.vmap(monoid.lift)(values)
+
+
+def chunk_prefix_scan(monoid: Monoid, lifted: PyTree) -> PyTree:
+    """Inclusive prefix scan along axis 0: out[i] = v_0 ⊗ … ⊗ v_i.
+
+    Uses ``lax.associative_scan`` (log-depth), so float results may be a
+    reassociation of the sequential left fold; integer monoids are exact.
+    """
+    return jax.lax.associative_scan(monoid.combine, lifted, axis=0)
+
+
+def chunk_suffix_scan(monoid: Monoid, lifted: PyTree) -> PyTree:
+    """Inclusive suffix scan along axis 0: out[i] = v_i ⊗ … ⊗ v_{k-1}.
+
+    NOT ``associative_scan(..., reverse=True)``: that computes the
+    reversed-operand product, which is wrong for non-commutative monoids.
+    Flip the axis and scan with the operands swapped instead.
+    """
+    flipped = jax.tree.map(lambda a: jnp.flip(a, 0), lifted)
+    out = jax.lax.associative_scan(
+        lambda a, b: monoid.combine(b, a), flipped, axis=0
+    )
+    return jax.tree.map(lambda a: jnp.flip(a, 0), out)
+
+
+def chunk_fold(monoid: Monoid, lifted: PyTree) -> PyTree:
+    """Total aggregate of a lifted chunk (one log-depth reduction)."""
+    return tree_index(chunk_suffix_scan(monoid, lifted), 0)
+
+
+def generic_insert_bulk(algo, monoid: Monoid, state: PyTree, values: PyTree) -> PyTree:
+    """Fallback: k sequential inserts fused into one ``lazy_fori`` loop."""
+    k = chunk_length(values)
+    return lazy_fori(
+        0, k, lambda i, s: algo.insert(monoid, s, tree_index(values, i)), state
+    )
+
+
+def generic_evict_bulk(algo, monoid: Monoid, state: PyTree, k) -> PyTree:
+    """Fallback: k sequential evicts fused into one ``lazy_fori`` loop."""
+    return lazy_fori(0, k, lambda i, s: algo.evict(monoid, s), state)
+
+
+def insert_bulk(algo, monoid: Monoid, state: PyTree, values: PyTree) -> PyTree:
+    """Insert a stacked chunk of raw inputs; dispatches to the algorithm's
+    specialized bulk op when it has one."""
+    fn = getattr(algo, "insert_bulk", None)
+    if fn is not None:
+        return fn(monoid, state, values)
+    return generic_insert_bulk(algo, monoid, state, values)
+
+
+def evict_bulk(algo, monoid: Monoid, state: PyTree, k) -> PyTree:
+    """Evict the k oldest elements; dispatches like :func:`insert_bulk`."""
+    fn = getattr(algo, "evict_bulk", None)
+    if fn is not None:
+        return fn(monoid, state, k)
+    return generic_evict_bulk(algo, monoid, state, k)
 
 
 # ---------------------------------------------------------------------------

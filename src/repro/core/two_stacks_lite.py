@@ -12,14 +12,21 @@ back sublist l_B (raw lifted values); ``aggB`` holds the product of l_B.
 
 from __future__ import annotations
 
+import dataclasses
+
 import jax
+
+import jax.numpy as jnp
 
 from repro.core.monoids import Monoid
 from repro.core.swag_base import (
     alloc_ring,
+    chunk_fold,
+    chunk_length,
     i32,
     lazy_cond,
     lazy_fori,
+    lift_chunk,
     ring_get,
     ring_set,
     swag_state,
@@ -115,3 +122,48 @@ def evict(monoid: Monoid, state: TwoStacksLiteState) -> TwoStacksLiteState:
         e=state.e,
         capacity=state.capacity,
     )
+
+
+# --- bulk ops (chunked streaming protocol) ---------------------------------
+
+
+_replace = dataclasses.replace  # @swag_state states are frozen dataclasses
+
+
+def insert_bulk(monoid: Monoid, state: TwoStacksLiteState, values) -> TwoStacksLiteState:
+    """k inserts as one vectorized ring write + one log-depth chunk fold.
+
+    The back sublist stores raw lifted values, so a chunk appends wholesale;
+    ``aggB`` picks up the chunk's total in a single reduction instead of a
+    k-long sequential ⊗-chain.  Requires size + k ≤ capacity (same ring
+    constraint as per-element inserts).
+    """
+    vs = lift_chunk(monoid, values)
+    k = chunk_length(vs)
+    idx = (state.e + jnp.arange(k, dtype=jnp.int32)) % state.capacity
+    deque = jax.tree.map(lambda a, v: a.at[idx].set(v), state.deque, vs)
+    return _replace(
+        state,
+        deque=deque,
+        agg_b=monoid.combine(state.agg_b, chunk_fold(monoid, vs)),
+        e=state.e + k,
+    )
+
+
+def evict_bulk(monoid: Monoid, state: TwoStacksLiteState, k) -> TwoStacksLiteState:
+    """k evicts with at most ONE flip instead of a flip check per element.
+
+    Pointer-advance to the F/B boundary first, then — only if evictions
+    remain — run the single suffix-combine flip and advance the rest.
+    Equivalent to k sequential evicts: the flip fires exactly when the k-th
+    eviction would strictly cross the boundary.
+    """
+    k = i32(k)
+    kb = jnp.minimum(k, state.b - state.f)  # evictions before the boundary
+    state = _replace(state, f=state.f + kb)
+
+    def flip_then_advance(s: TwoStacksLiteState) -> TwoStacksLiteState:
+        s = _flip(monoid, s)
+        return _replace(s, f=s.f + (k - kb))
+
+    return lazy_cond(k > kb, flip_then_advance, lambda s: s, state)

@@ -29,7 +29,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import daba_lite
+from repro.core import daba_lite, swag_base
 from repro.core.monoids import Monoid, affine_monoid
 
 PyTree = Any
@@ -184,3 +184,80 @@ class ChunkedWindowedStateCell:
         eff = m.combine(win, partial)  # window ∘ current partial chunk
         new_state = {"daba": daba, "partial": partial, "count": count}
         return new_state, eff["u"]
+
+    def prefill(self, state: PyTree, decays: jax.Array, updates: jax.Array):
+        """Consume a (T, …) chunk of tokens in bulk; returns (state, (T,H,K,V)).
+
+        The vectorized long-context prefill path (rwkv6 / zamba2): instead of
+        a per-token scan, whole chunks are composed with log-depth prefix
+        scans, the chunk-granular window comes from one generic VHGW sliding
+        window over the chunk maps, and the final DABA Lite state is rebuilt
+        through the bulk-op protocol (``insert_bulk``).  Output matches the
+        sequential ``update`` loop up to float reassociation.
+
+        Requires a fresh state (``init()``); falls back to the per-token scan
+        when the state is warm or traced.
+        """
+        try:
+            fresh = int(state["count"]) == 0 and int(
+                daba_lite.size(state["daba"])
+            ) == 0
+        except (jax.errors.TracerArrayConversionError, jax.errors.ConcretizationTypeError):
+            fresh = False
+        if not fresh:
+            def step(st, du):
+                d, u = du
+                return self.update(st, d, u)
+
+            return jax.lax.scan(step, state, (decays, updates))
+
+        from repro.core.chunked import tree_sliding_window  # local: avoid cycle
+
+        m = self.monoid
+        T, C, Wc = decays.shape[0], self.chunk, self.window_chunks
+        n_full, rem = divmod(T, C)
+        lifted = {"d": decays, "u": updates}
+        ident = m.identity()
+
+        outs = []
+        win = None  # truncated chunk-window aggregates, (n_full, ...)
+        if n_full:
+            blocks = jax.tree.map(
+                lambda a: a[: n_full * C].reshape((n_full, C) + a.shape[1:]),
+                lifted,
+            )
+            intra = jax.lax.associative_scan(m.combine, blocks, axis=1)
+            maps = jax.tree.map(lambda a: a[:, -1], intra)  # per-chunk totals
+            win = tree_sliding_window(m, maps, Wc)
+            win_shift = jax.tree.map(
+                lambda w_, i: jnp.concatenate([i[None], w_[:-1]], axis=0),
+                win,
+                jax.tree.map(jnp.asarray, ident),
+            )
+            # token t in chunk c sees: window over chunks < c, then its own
+            # running partial — except the chunk's last token, which sees the
+            # just-rolled-over window (partial resets to identity there).
+            full = jax.vmap(m.combine)(win_shift, intra)
+            full = jax.tree.map(lambda a, w_: a.at[:, -1].set(w_), full, win)
+            outs.append(
+                jax.tree.map(lambda a: a.reshape((n_full * C,) + a.shape[2:]), full)
+            )
+        partial, count = ident, jnp.zeros((), jnp.int32)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_full * C:], lifted)
+            p_rem = swag_base.chunk_prefix_scan(m, tail)
+            w_last = (
+                swag_base.tree_index(win, n_full - 1) if n_full else ident
+            )
+            outs.append(jax.vmap(m.combine, in_axes=(None, 0))(w_last, p_rem))
+            partial, count = swag_base.tree_index(p_rem, rem - 1), jnp.asarray(rem, jnp.int32)
+        out = jax.tree.map(lambda *ps: jnp.concatenate(ps, axis=0), *outs)
+
+        daba = daba_lite.init(m, Wc + 1)
+        k = min(Wc, n_full)
+        if k:
+            daba = daba_lite.insert_bulk(
+                m, daba, jax.tree.map(lambda a: a[n_full - k:], maps)
+            )
+        state = {"daba": daba, "partial": partial, "count": count}
+        return state, out["u"]

@@ -76,7 +76,8 @@ def compressed_psum_mean(x: jax.Array, axis_name: str, min_size: int = 1024):
     wire bytes ≈ payload/4 vs f32 psum.  Followed by an int8 all-gather of
     the owned chunk.  Small tensors fall back to a plain psum.
     """
-    n = jax.lax.axis_size(axis_name)
+    # jax 0.4.x has no lax.axis_size; psum of a constant folds to the size.
+    n = jax.lax.psum(1, axis_name)
     if n == 1:
         return x
     orig_shape, orig_dtype = x.shape, x.dtype

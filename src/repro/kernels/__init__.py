@@ -1,3 +1,8 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# ops_registry.py is the ONE place elementwise monoid ops
+# (sum/prod/min/max/logsumexp) are defined: every kernel and the
+# chunked streaming engine (repro.core.chunked) dispatch through it —
+# add new ops there and all bulk paths pick them up.

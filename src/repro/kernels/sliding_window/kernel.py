@@ -27,45 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_NEG_BIG = {
-    jnp.dtype(jnp.float32): -3.0e38,
-    jnp.dtype(jnp.bfloat16): -3.0e38,
-    jnp.dtype(jnp.float16): -6.0e4,
-}
-
-
-def combine_fn(op: str):
-    if op == "sum":
-        return lambda a, b: a + b
-    if op == "max":
-        return jnp.maximum
-    if op == "min":
-        return jnp.minimum
-    if op == "logsumexp":
-
-        def lse(a, b):
-            m = jnp.maximum(a, b)
-            lo = jnp.minimum(a, b)
-            # stable: m + log1p(exp(lo - m)); exp(-inf-ish) underflows to 0.
-            return m + jnp.log1p(jnp.exp(lo - m))
-
-        return lse
-    raise ValueError(f"unsupported op {op!r}")
-
-
-def identity_for(op: str, dtype) -> float | int:
-    dtype = jnp.dtype(dtype)
-    if op == "sum":
-        return 0
-    if op == "max":
-        return _NEG_BIG.get(dtype, jnp.iinfo(dtype).min if dtype.kind == "i" else -3.0e38)
-    if op == "logsumexp":
-        return _NEG_BIG.get(dtype, -3.0e38)
-    if op == "min":
-        if dtype.kind == "i":
-            return jnp.iinfo(dtype).max
-        return -_NEG_BIG.get(dtype, -3.0e38)
-    raise ValueError(op)
+# Op tables live in the shared registry so every kernel and the chunked
+# streaming engine agree on combine/identity; re-exported here for back-compat.
+from repro.kernels.ops_registry import combine_fn, identity_for
 
 
 def _shift_left(x: jax.Array, d: int, fill) -> jax.Array:

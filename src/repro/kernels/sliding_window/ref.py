@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sliding_window.kernel import combine_fn, identity_for
+from repro.kernels.ops_registry import combine_fn, identity_for
 
 
 def sliding_window_ref(x: jax.Array, *, window: int, op: str = "sum") -> jax.Array:

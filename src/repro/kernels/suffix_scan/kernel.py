@@ -26,11 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.sliding_window.kernel import (
-    _suffix_scan_block,
-    combine_fn,
-    identity_for,
-)
+from repro.kernels.ops_registry import combine_fn, identity_for
+from repro.kernels.sliding_window.kernel import _suffix_scan_block
 
 
 def _suffix_kernel(x_ref, o_ref, carry_ref, *, op: str):

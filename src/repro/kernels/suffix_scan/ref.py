@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sliding_window.kernel import combine_fn
+from repro.kernels.ops_registry import combine_fn
 
 
 def suffix_scan_ref(x: jax.Array, *, op: str = "sum") -> jax.Array:

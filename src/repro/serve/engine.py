@@ -49,6 +49,7 @@ class DecodeEngine:
         self.slot_req: list[Optional[Request]] = [None] * batch_slots
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.queue: list[Request] = []
+        self.retired: list[Request] = []  # finished since last drain
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self._decode = jax.jit(self.model.decode_step)
         # single-slot prefill (B=1 spec) + scatter into the batch state
@@ -91,7 +92,8 @@ class DecodeEngine:
 
     def step(self) -> int:
         """One engine step: refill slots, decode once, retire finished.
-        Returns the number of active slots."""
+        Returns the number of active slots.  Retired requests are collected
+        in ``self.retired`` (drained by :meth:`run_until_drained`)."""
         self._fill_free_slots()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
@@ -108,12 +110,15 @@ class DecodeEngine:
             if self.slot_remaining[i] <= 0 or (req.eos is not None and tok == req.eos):
                 req.done = True
                 self.slot_req[i] = None
+                self.retired.append(req)
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
         done: list[Request] = []
         for _ in range(max_steps):
             n = self.step()
+            done.extend(self.retired)
+            self.retired.clear()
             if n == 0 and not self.queue:
                 break
         return done

@@ -1,0 +1,190 @@
+"""Bulk-op protocol + chunked streaming engine ≡ per-element reference.
+
+Property-style equivalence: ``insert_bulk``/``evict_bulk`` (specialized and
+fallback) and ``ChunkedStream`` must reproduce the per-element
+``insert``/``evict``/``stream`` semantics for every algorithm, across
+commutative/non-commutative and invertible/non-invertible monoids, with
+ragged chunk sizes.  Integer monoids must match bit-exactly (associativity
+is exact in modular arithmetic, so reassociation cannot change results);
+float monoids up to combine reassociation (allclose).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ALGORITHMS, GENERAL_ALGORITHMS, monoids, swag_base
+from repro.core.batched import BatchedSWAG
+from repro.core.chunked import ChunkedStream, tree_sliding_window
+
+rng = np.random.default_rng(0)
+
+
+def _scalar_vals(shape, dtype=jnp.float32):
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(rng.integers(-9, 9, shape), dtype)
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+def _affine_vals(shape, dtype=jnp.int32):
+    return (
+        jnp.asarray(rng.integers(-5, 5, shape), dtype),
+        jnp.asarray(rng.integers(-5, 5, shape), dtype),
+    )
+
+
+# name -> (monoid, value maker, exact?)   Deliberately spans the algebraic
+# classes: commutative+invertible, commutative pytree, and two
+# NON-commutative NON-invertible ones (one exact-integer, one float).
+MONOID_CASES = {
+    "sum_i32": (monoids.sum_monoid(jnp.int32),
+                lambda s: _scalar_vals(s, jnp.int32), True),
+    "mean": (monoids.mean_monoid(), _scalar_vals, False),
+    "affine_i32": (monoids.affine_int_monoid(), _affine_vals, True),
+    "m4": (monoids.m4_monoid(), _scalar_vals, False),
+}
+
+
+def _assert_tree_close(a, b, exact, ctx=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        if exact:
+            assert np.array_equal(x, y), (ctx, x, y)
+        else:
+            assert np.allclose(x, y, rtol=1e-4, atol=1e-4), (ctx, x, y)
+
+
+# ---------------------------------------------------------------------------
+# insert_bulk / evict_bulk vs per-element, every algorithm
+# ---------------------------------------------------------------------------
+
+# Ragged bulk phases: (kind, count) — interleavings that cross flip points,
+# empty the window completely, and leave partial windows behind.
+PHASES = [
+    [("i", 20), ("e", 7), ("i", 5), ("e", 3)],
+    [("i", 3), ("e", 3), ("i", 8), ("e", 1), ("i", 2), ("e", 9)],
+    [("i", 1), ("e", 1), ("i", 30), ("e", 30)],
+]
+
+
+@pytest.mark.parametrize("mname", sorted(MONOID_CASES))
+@pytest.mark.parametrize("algo_name", sorted(ALGORITHMS))
+def test_bulk_matches_per_element(algo_name, mname):
+    m, mk, exact = MONOID_CASES[mname]
+    if algo_name == "soe" and not m.invertible:
+        pytest.skip("subtract-on-evict needs an invertible monoid")
+    algo = ALGORITHMS[algo_name]
+    for phases in PHASES:
+        s_ref, s_bulk = algo.init(m, 64), algo.init(m, 64)
+        for kind, n in phases:
+            if kind == "i":
+                vals = mk(n)
+                for i in range(n):
+                    s_ref = algo.insert(m, s_ref, swag_base.tree_index(vals, i))
+                s_bulk = swag_base.insert_bulk(algo, m, s_bulk, vals)
+            else:
+                for _ in range(n):
+                    s_ref = algo.evict(m, s_ref)
+                s_bulk = swag_base.evict_bulk(algo, m, s_bulk, n)
+            assert int(algo.size(s_bulk)) == int(algo.size(s_ref))
+            _assert_tree_close(
+                m.lower(algo.query(m, s_bulk)),
+                m.lower(algo.query(m, s_ref)),
+                exact, (algo_name, mname, phases),
+            )
+        # a bulk-produced state must keep behaving under per-element ops
+        more = mk(5)
+        for i in range(5):
+            v = swag_base.tree_index(more, i)
+            s_ref = algo.insert(m, s_ref, v)
+            s_bulk = algo.insert(m, s_bulk, v)
+        for _ in range(3):
+            s_ref, s_bulk = algo.evict(m, s_ref), algo.evict(m, s_bulk)
+        _assert_tree_close(
+            m.lower(algo.query(m, s_bulk)),
+            m.lower(algo.query(m, s_ref)),
+            exact, (algo_name, mname, "followup"),
+        )
+
+
+def test_bulk_ops_jittable():
+    m = monoids.sum_monoid()
+    for algo_name, algo in ALGORITHMS.items():
+        st = algo.init(m, 32)
+        st = jax.jit(lambda s, v: swag_base.insert_bulk(algo, m, s, v))(
+            st, jnp.arange(10, dtype=jnp.float32)
+        )
+        st = jax.jit(lambda s: swag_base.evict_bulk(algo, m, s, 4))(st)
+        assert float(algo.query(m, st)) == sum(range(4, 10)), algo_name
+
+
+# ---------------------------------------------------------------------------
+# ChunkedStream vs per-element BatchedSWAG.stream
+# ---------------------------------------------------------------------------
+
+
+def _per_element_stream(algo, m, xs, window):
+    b = BatchedSWAG(algo, m, window + 4)
+    state = b.init(jax.tree.leaves(xs)[0].shape[1])
+    _, ys = b.stream(state, xs, window, chunked=False)
+    return ys
+
+
+@pytest.mark.parametrize("algo_name", sorted(GENERAL_ALGORITHMS))
+def test_chunked_stream_matches_every_algorithm(algo_name):
+    """Same randomized (T, B) stream: chunked engine ≡ per-element scan."""
+    T, B, w = 61, 3, 8
+    xs = _scalar_vals((T, B))
+    ref = _per_element_stream(GENERAL_ALGORITHMS[algo_name], monoids.sum_monoid(), xs, w)
+    ys = ChunkedStream(monoids.sum_monoid(), w, chunk=16).stream(xs)
+    _assert_tree_close(ys, ref, exact=False, ctx=algo_name)
+
+
+@pytest.mark.parametrize("mname", sorted(MONOID_CASES))
+@pytest.mark.parametrize(
+    "T,B,w,C",
+    [(50, 3, 7, 16), (40, 2, 5, 5), (33, 1, 8, 13), (20, 2, 12, 4), (25, 2, 30, 8)],
+)
+def test_chunked_stream_monoids_ragged_chunks(mname, T, B, w, C):
+    """Ragged chunk sizes (C ∤ T, C < w, w > T) across monoid classes, both
+    the Pallas-kernel path (scalar ops) and the generic pytree path."""
+    m, mk, exact = MONOID_CASES[mname]
+    xs = mk((T, B))
+    ref = _per_element_stream(ALGORITHMS["daba_lite"], m, xs, w)
+    ys = ChunkedStream(m, w, chunk=C).stream(xs)
+    _assert_tree_close(ys, ref, exact, (mname, T, B, w, C))
+
+
+def test_chunked_stream_kernel_path_is_used_for_scalar_ops():
+    eng = ChunkedStream(monoids.sum_monoid(), 8)
+    assert eng.op == "sum"
+    eng = ChunkedStream(monoids.m4_monoid(), 8)
+    assert eng.op is None  # pytree Agg -> generic associative_scan path
+
+
+def test_batched_stream_chunked_routing():
+    """stream(chunked=True) ≡ stream(chunked=False), including a usable
+    final state (identical window contents → identical future behaviour)."""
+    for algo_name, algo in GENERAL_ALGORITHMS.items():
+        m = monoids.sum_monoid()
+        b = BatchedSWAG(algo, m, 12)
+        xs = _scalar_vals((60, 3))
+        st_pe, ys_pe = b.stream(b.init(3), xs, 8, chunked=False)
+        st_ch, ys_ch = b.stream(b.init(3), xs, 8, chunked=True)
+        _assert_tree_close(ys_ch, ys_pe, exact=False, ctx=algo_name)
+        _assert_tree_close(b.query(st_ch), b.query(st_pe), False, algo_name)
+        more = _scalar_vals((3,))
+        st_pe, st_ch = b.insert(st_pe, more), b.insert(st_ch, more)
+        st_pe, st_ch = b.evict(st_pe), b.evict(st_ch)
+        _assert_tree_close(b.query(st_ch), b.query(st_pe), False, algo_name)
+
+
+def test_tree_sliding_window_matches_kernel_ref():
+    from repro.kernels.sliding_window.ref import sliding_window_ref
+
+    x = _scalar_vals((40, 2))
+    m = monoids.max_monoid()
+    y = tree_sliding_window(m, x, 6)  # (T, B) time-leading
+    yr = sliding_window_ref(jnp.asarray(x).T, window=6, op="max").T
+    assert jnp.array_equal(y, yr)

@@ -101,11 +101,12 @@ _SUBPROCESS_COLLECTIVE = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
     from repro.distributed.compression import compressed_psum_mean
     mesh = jax.make_mesh((8,), ("dp",))
     x = jnp.asarray(np.random.default_rng(0).standard_normal((8, 4096)), jnp.float32)
-    f = jax.shard_map(lambda x: compressed_psum_mean(x, "dp"),
-                      mesh=mesh, in_specs=P("dp", None), out_specs=P("dp", None))
+    f = shard_map(lambda x: compressed_psum_mean(x, "dp"),
+                  mesh=mesh, in_specs=P("dp", None), out_specs=P("dp", None))
     y = f(x)
     ref = jnp.broadcast_to(x.mean(0, keepdims=True), x.shape)
     rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())

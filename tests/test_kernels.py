@@ -15,7 +15,7 @@ rng = np.random.default_rng(0)
 SWEEP = [(4, 64, 8), (3, 100, 7), (1, 17, 17), (5, 33, 5), (2, 256, 64), (2, 80, 2)]
 
 
-@pytest.mark.parametrize("op", ["sum", "max", "min", "logsumexp"])
+@pytest.mark.parametrize("op", ["sum", "prod", "max", "min", "logsumexp"])
 @pytest.mark.parametrize("B,T,w", SWEEP)
 def test_sliding_window_f32(op, B, T, w):
     x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
@@ -46,7 +46,7 @@ def test_sliding_window_nd_input():
     assert jnp.array_equal(y, yr)
 
 
-@pytest.mark.parametrize("op", ["sum", "max", "logsumexp"])
+@pytest.mark.parametrize("op", ["sum", "prod", "max", "logsumexp"])
 @pytest.mark.parametrize("B,T,bt", [(4, 64, 16), (3, 100, 32), (1, 7, 256), (5, 513, 64)])
 def test_suffix_scan(op, B, T, bt):
     x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)

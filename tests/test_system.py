@@ -86,10 +86,9 @@ def test_engine_matches_standalone_decode():
     ]
     for r in reqs:
         eng.submit(r)
-    for _ in range(80):
-        if eng.step() == 0 and not eng.queue:
-            break
+    done = eng.run_until_drained(max_steps=80)
     assert all(r.done for r in reqs)
+    assert sorted(r.rid for r in done) == [r.rid for r in reqs]
     r0 = reqs[0]
     spec = DecodeSpec(cache_len=64, local_cache_len=cfg.local_window, batch=1)
     lg, st = model.prefill(params, {"tokens": jnp.asarray(r0.prompt[None])}, spec)

@@ -7,10 +7,13 @@ Same (T, B) stream, same count-based window, two engines:
     element;
   * ``chunked``: :class:`repro.core.chunked.ChunkedStream` — the Pallas
     sliding_window/suffix_scan kernels amortize the whole chunk into ~3
-    combines per element of log-depth vector work.
+    combines per element of log-depth vector work;
+  * ``*_warm``: the same comparison starting from a LIVE (full) window —
+    the chunked side pays the warm-carry extraction plus the final-state
+    rebuild (state_to_carry / bulk evict+insert) on top of the stream.
 
 Rows use the bench_throughput.py CSV style:
-``chunked,<op>,<engine>,window=<w>,items_per_s=<n>``.
+``chunked,<op>,<engine>,window=<w>,T=<T>,items_per_s=<n>``.
 """
 
 from __future__ import annotations
@@ -59,22 +62,63 @@ def chunked_throughput(monoid, window, T, B, chunk=None, repeats=2):
     return repeats * T * B / (time.perf_counter() - t0)
 
 
+def _warm_state(b, window, T, B):
+    """A live, full window per lane (the warm-carry protocol's input)."""
+    st = b.init(B)
+    st, _ = b.stream(st, _stream(window, B, seed=123), window, chunked=False)
+    return st
+
+
+def warm_throughput(monoid, window, T, B, chunked, algo_name="daba_lite", repeats=2):
+    """BatchedSWAG.stream from a warm state: ``chunked=None`` auto-routes
+    through the bulk engine (carry extraction + final-state rebuild
+    included in the timing); ``chunked=False`` is the per-element scan."""
+    b = BatchedSWAG(ALGORITHMS[algo_name], monoid, window + 4)
+    warm = _warm_state(b, window, T, B)
+    xs = _stream(T, B)
+    if chunked is False:
+        run = jax.jit(lambda st, xs: b.stream(st, xs, window, chunked=False))
+    else:
+        run = lambda st, xs: b.stream(st, xs, window)  # host chunk loop
+    # block on the full (state, ys) tuple so the final-state rebuild is
+    # actually awaited, not just the window outputs
+    jax.block_until_ready(run(warm, xs))  # compile + warm caches
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(run(warm, xs))
+    return repeats * T * B / (time.perf_counter() - t0)
+
+
 def main(window=1024, T=100_000, B=8, operators=("sum",), pe_T=20_000):
     """``pe_T``: the per-element path is timed on a truncated stream and
     scaled — 100k sequential scan steps would dominate the benchmark run
     while measuring the same per-item cost."""
     rows = []
+
+    def emit(op_name, eng, thr):
+        rows.append(
+            f"chunked,{op_name},{eng},window={window},T={T},items_per_s={thr:.0f}"
+        )
+        print(rows[-1], flush=True)
+
     for op_name in operators:
         monoid = OPERATORS[op_name]()
         thr_pe = per_element_throughput(monoid, window, min(T, pe_T), B)
         thr_ch = chunked_throughput(monoid, window, T, B)
-        for eng, thr in [("per_element", thr_pe), ("chunked", thr_ch)]:
-            rows.append(
-                f"chunked,{op_name},{eng},window={window},items_per_s={thr:.0f}"
-            )
-            print(rows[-1], flush=True)
-        speedup = thr_ch / thr_pe
-        rows.append(f"chunked,{op_name},speedup,window={window},x={speedup:.1f}")
+        emit(op_name, "per_element", thr_pe)
+        emit(op_name, "chunked", thr_ch)
+        rows.append(
+            f"chunked,{op_name},speedup,window={window},T={T},x={thr_ch / thr_pe:.1f}"
+        )
+        print(rows[-1], flush=True)
+        thr_pe_w = warm_throughput(monoid, window, min(T, pe_T), B, chunked=False)
+        thr_ch_w = warm_throughput(monoid, window, T, B, chunked=None)
+        emit(op_name, "per_element_warm", thr_pe_w)
+        emit(op_name, "chunked_warm", thr_ch_w)
+        rows.append(
+            f"chunked,{op_name},speedup_warm,window={window},T={T},"
+            f"x={thr_ch_w / thr_pe_w:.1f}"
+        )
         print(rows[-1], flush=True)
     return rows
 

@@ -1,8 +1,11 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,...,derived`` CSV lines.  Scales are reduced for the single-
-core CPU container (see benchmarks/common.py); EXPERIMENTS.md records a full
-run's output.
+Prints ``name,...,derived`` CSV lines AND writes a machine-readable
+``BENCH_<name>.json`` per benchmark (parsed rows + backend + timestamp) so
+the perf trajectory is comparable across PRs (``--out-dir`` to redirect,
+``--no-json`` to disable).  Scales are reduced for the single-core CPU
+container (see benchmarks/common.py); EXPERIMENTS.md records a full run's
+output.
 
   Fig 9  → bench_latency      per-op latency + exact ⊗-count distributions
   Fig 10 → bench_throughput   throughput vs window size (static)
@@ -14,6 +17,46 @@ run's output.
 """
 
 import argparse
+import datetime
+import json
+import pathlib
+
+
+def parse_rows(rows) -> list:
+    """CSV benchmark rows → dicts: ``k=v`` fields typed as floats where
+    possible, bare fields collected under ``labels``."""
+    parsed = []
+    for row in rows or []:
+        rec = {"raw": str(row), "labels": []}
+        for part in str(row).split(","):
+            if "=" in part:
+                k, v = part.split("=", 1)
+                try:
+                    rec[k] = float(v)
+                except ValueError:
+                    rec[k] = v
+            else:
+                rec["labels"].append(part)
+        parsed.append(rec)
+    return parsed
+
+
+def emit_json(name: str, rows, out_dir: str = ".") -> pathlib.Path:
+    """Write ``BENCH_<name>.json``: parsed rows + backend, so the perf
+    trajectory (items/s per window/T/engine) is tracked across PRs."""
+    import jax
+
+    payload = {
+        "bench": name,
+        "backend": jax.default_backend(),
+        "generated": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "rows": parse_rows(rows),
+    }
+    path = pathlib.Path(out_dir) / f"BENCH_{name}.json"
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path}")
+    return path
 
 
 def main() -> None:
@@ -22,11 +65,19 @@ def main() -> None:
                     help="comma list: latency,throughput,dynamic,eventtime,"
                          "batched,chunked,roofline")
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<name>.json summaries")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip the JSON summaries")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
     def on(name):
         return want is None or name in want
+
+    def done(name, rows):
+        if not args.no_json:
+            emit_json(name, rows, args.out_dir)
 
     from benchmarks import (
         bench_batched,
@@ -41,39 +92,48 @@ def main() -> None:
     if on("latency"):
         print("# Fig 9 — latency")
         if args.quick:
-            bench_latency.main(window=2**8, rounds=800, operators=("sum",))
+            rows = bench_latency.main(window=2**8, rounds=800, operators=("sum",))
         else:
-            bench_latency.main()
+            rows = bench_latency.main()
+        done("latency", rows)
     if on("throughput"):
         print("# Fig 10 — throughput (static windows)")
         if args.quick:
-            bench_throughput.main(windows=(2**4,), items=50_000, operators=("sum",))
+            rows = bench_throughput.main(windows=(2**4,), items=50_000,
+                                         operators=("sum",))
         else:
-            bench_throughput.main()
+            rows = bench_throughput.main()
+        done("throughput", rows)
     if on("dynamic"):
         print("# Fig 11 — throughput (dynamic fill-and-drain)")
         if args.quick:
-            bench_dynamic.main(windows=(2**4,), items=30_000, operators=("sum",))
+            rows = bench_dynamic.main(windows=(2**4,), items=30_000,
+                                      operators=("sum",))
         else:
-            bench_dynamic.main()
+            rows = bench_dynamic.main()
+        done("dynamic", rows)
     if on("eventtime"):
         print("# Fig 12 — event-time windows (synthetic bursty stream)")
-        bench_eventtime.main(n_items=2000 if args.quick else 6000)
+        rows = bench_eventtime.main(n_items=2000 if args.quick else 6000)
+        done("eventtime", rows)
     if on("batched"):
         print("# beyond-paper — batched/SIMD SWAG")
         if args.quick:
-            bench_batched.main(batches=(16,), steps=4000)
+            rows = bench_batched.main(batches=(16,), steps=4000)
         else:
-            bench_batched.main()
+            rows = bench_batched.main()
+        done("batched", rows)
     if on("chunked"):
         print("# §8.2 — chunked bulk engine vs per-element stream")
         if args.quick:
-            bench_chunked.main(window=2**8, T=20_000, B=4, pe_T=5_000)
+            rows = bench_chunked.main(window=2**8, T=20_000, B=4, pe_T=5_000)
         else:
-            bench_chunked.main()
+            rows = bench_chunked.main()
+        done("chunked", rows)
     if on("roofline"):
         print("# §Roofline — dry-run derived table")
-        roofline_table.main()
+        rows = roofline_table.main()
+        done("roofline", rows)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,10 @@ Maintains, with worst-case O(1) updates per event:
   * a windowed Bloom filter for "seen recently?" dedup (non-invertible OR
     monoid — subtract-on-evict is impossible, DABA Lite is required),
   * batched per-key windows (partition parallelism, paper §8.2) as one
-    vmapped state.
+    vmapped state, streamed in two warm-continued halves,
+  * a unified WindowedTelemetry state: several named metrics in ONE
+    product-monoid window — single dispatch per observation, chunked bulk
+    ingest for whole batches.
 
     PYTHONPATH=src python examples/streaming_analytics.py
 """
@@ -14,7 +17,7 @@ Maintains, with worst-case O(1) updates per event:
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daba_lite, monoids
+from repro.core import WindowedTelemetry, daba_lite, monoids
 from repro.core.batched import BatchedSWAG
 
 
@@ -59,13 +62,41 @@ def per_key_windows():
     xs = jnp.asarray(
         np.random.default_rng(1).integers(0, 100, (200, 1024)), jnp.float32
     )
-    st, qs = b.stream(st, xs, window=32)
+    # Two warm-continued halves — the live windows carry across stream calls
+    # (streams of T ≥ 2048 would auto-route through the chunked bulk engine).
+    st, _ = b.stream(st, xs[:120], window=32)
+    st, qs = b.stream(st, xs[120:], window=32)
     q = qs  # (T, batch) pytree of {m, c}
     print(f"  final per-key window max (first 5 keys): {np.asarray(q['m'][-1][:5])}")
     print(f"  their maxcounts:                        {np.asarray(q['c'][-1][:5])}")
+
+
+def unified_telemetry():
+    print("\n— unified windowed telemetry (one product-monoid state) —")
+    telem = WindowedTelemetry(
+        {
+            "lat_mean": monoids.mean_monoid(),
+            "lat_max": monoids.max_monoid(),
+            "err_rate": monoids.mean_monoid(),
+        },
+        window=64,
+    )
+    rng = np.random.default_rng(7)
+    for _ in range(40):  # single jitted dispatch per observation
+        lat = float(rng.gamma(3.0, 2.0))
+        telem.observe({"lat_mean": lat, "lat_max": lat,
+                       "err_rate": float(rng.random() < 0.03)})
+    # whole (C,) chunks stream through the bulk engine in one call
+    burst = rng.gamma(9.0, 2.0, 64).astype(np.float32)
+    telem.observe_bulk({"lat_mean": burst, "lat_max": burst,
+                        "err_rate": np.zeros(64, np.float32)})
+    s = telem.snapshot()  # one host transfer for every metric
+    print(f"  windowed latency mean={float(s['lat_mean']):.2f}ms  "
+          f"max={float(s['lat_max']):.2f}ms  err_rate={float(s['err_rate']):.3f}")
 
 
 if __name__ == "__main__":
     event_time_relvar()
     windowed_dedup()
     per_key_windows()
+    unified_telemetry()

@@ -3,11 +3,15 @@ aggregation (DABA / DABA Lite) and the algorithm family it belongs to.
 
 Modules
 -------
-monoids          lift/combine/lower aggregation framework (paper §2.2)
-swag_base        functional-state machinery shared by all algorithms, plus
-                 the bulk-op protocol (insert_bulk/evict_bulk: every
-                 algorithm accepts whole chunks; two_stacks_lite and
-                 daba_lite have specialized amortized implementations)
+monoids          lift/combine/lower aggregation framework (paper §2.2), incl.
+                 product_monoid (N named metrics as one element)
+swag_base        functional-state machinery shared by all algorithms, the
+                 bulk-op protocol (insert_bulk/evict_bulk: every algorithm
+                 accepts whole chunks; two_stacks_lite and daba_lite have
+                 specialized amortized implementations), and the warm-state
+                 carry protocol (state_to_carry/carry_to_state: any live
+                 window converts to/from a chunked-stream carry; every
+                 algorithm has a one-scan specialization)
 recalc           recalculate-from-scratch baseline (O(n) query)
 soe              subtract-on-evict baseline (invertible monoids only)
 two_stacks       amortized O(1) / worst-case O(n), 2n space (paper §3)
@@ -16,13 +20,19 @@ flatfit          amortized O(1) index traverser (paper §7 baseline; eager)
 daba             worst-case O(1), 2n space (paper §5)
 daba_lite        worst-case O(1), n+2 space (paper §6) — headline algorithm
 batched          vmapped multi-window SWAG, shardable over meshes; stream()
-                 auto-routes large streams through the chunked engine
+                 auto-routes large streams (cold OR warm) through the
+                 chunked engine
 chunked          ChunkedStream: chunk-at-a-time bulk streaming engine
                  (paper §8.2 coarse-grained direction) — intra-chunk outputs
                  from the sliding_window/suffix_scan Pallas kernels (scalar
                  monoids from kernels/ops_registry) or generic associative
                  scans (any pytree monoid), cross-chunk via a suffix-tail
-                 carry; ~3 combines/element independent of window
+                 carry (warm-initializable from any live state); ~3
+                 combines/element independent of window
+telemetry        WindowedTelemetry: N named windowed metrics as ONE jitted
+                 product-monoid state (single dispatch per observation,
+                 batched snapshot, chunked observe_bulk) — the system's
+                 windowed-stats layer (data/train/serve all sit on it)
 windowed_state   sliding-window SSM/linear-attention state via DABA Lite;
                  ChunkedWindowedStateCell.prefill consumes whole chunks
 """
@@ -36,11 +46,25 @@ from repro.core import (
     recalc,
     soe,
     swag_base,
+    telemetry,
     two_stacks,
     two_stacks_lite,
 )
-from repro.core.monoids import Monoid, counting, get_monoid, available_monoids
-from repro.core.swag_base import SWAG, evict_bulk, insert_bulk
+from repro.core.monoids import (
+    Monoid,
+    counting,
+    get_monoid,
+    available_monoids,
+    product_monoid,
+)
+from repro.core.swag_base import (
+    SWAG,
+    carry_to_state,
+    evict_bulk,
+    insert_bulk,
+    state_to_carry,
+)
+from repro.core.telemetry import WindowedTelemetry
 
 ALGORITHMS = {
     "recalc": recalc,
@@ -66,11 +90,15 @@ EAGER_ALGORITHMS = {"flatfit": flatfit}
 __all__ = [
     "Monoid",
     "SWAG",
+    "WindowedTelemetry",
     "counting",
     "get_monoid",
     "available_monoids",
+    "product_monoid",
     "insert_bulk",
     "evict_bulk",
+    "state_to_carry",
+    "carry_to_state",
     "ALGORITHMS",
     "GENERAL_ALGORITHMS",
     "CONSTANT_TIME_ALGORITHMS",

@@ -33,8 +33,8 @@ from repro.core.monoids import Monoid
 PyTree = Any
 
 # stream() auto-routes through the chunked bulk engine at or above this many
-# steps (when the initial state is concretely empty); below it the per-element
-# scan's lower constant cost wins.
+# steps (for any concrete — cold or warm — initial state); below it the
+# per-element scan's lower constant cost wins.
 CHUNKED_AUTO_MIN_T = 2048
 
 
@@ -58,6 +58,21 @@ class BatchedSWAG:
             jax.vmap(
                 functools.partial(swag_base.insert_bulk, algo, monoid),
                 in_axes=(0, 1),
+            )
+        )
+        # per-lane bulk evict (k is a (batch,) array: warm lanes may be ragged)
+        self._bulk_evict = jax.jit(
+            jax.vmap(functools.partial(swag_base.evict_bulk, algo, monoid))
+        )
+        # fully-vectorized fresh-state rebuild from the last `window` inputs
+        # (one log-depth suffix scan, no sequential fixups) — used whenever
+        # the stream is long enough to replace the whole window
+        self._state_from_chunk = jax.jit(
+            jax.vmap(
+                lambda vs: swag_base.state_from_chunk(
+                    algo, monoid, vs, capacity
+                ),
+                in_axes=1,
             )
         )
 
@@ -119,21 +134,29 @@ class BatchedSWAG:
         count-based window: insert, evict once size exceeds ``window``.
 
         Routing: by default (``chunked=None``) streams with T ≥
-        ``CHUNKED_AUTO_MIN_T`` starting from a concretely-empty state go
-        through the :class:`~repro.core.chunked.ChunkedStream` bulk engine
-        (Pallas kernels / associative scans, ~3 combines per element);
-        everything else — small T, traced state under jit, warm state — takes
-        the per-element ``lax.scan``.  ``chunked=True`` forces the bulk path
-        (the caller asserts the initial state is empty); ``chunked=False``
-        forces per-element.  Outputs agree exactly for integer monoids and up
-        to combine reassociation for floats; the bulk path's final state is
-        rebuilt from the last ``window`` inputs via ``insert_bulk`` — a valid
-        state with identical window contents (and therefore identical query
-        results and future behaviour), not a bit-identical internal layout.
+        ``CHUNKED_AUTO_MIN_T`` whose state is concrete (not traced) with
+        every lane size ≤ ``window`` go through the
+        :class:`~repro.core.chunked.ChunkedStream` bulk engine (Pallas
+        kernels / associative scans, ~3 combines per element).  Warm
+        (non-empty) states are included: the engine's carry is initialized
+        from the live window via the warm-carry protocol
+        (``swag_base.state_to_carry``).  Everything else — small T, traced
+        state under jit, overfull lanes — takes the per-element ``lax.scan``.
+        ``chunked=True`` forces the bulk path (the caller asserts every lane
+        holds ≤ ``window`` elements); ``chunked=False`` forces per-element.
+        Outputs agree exactly for integer monoids and up to combine
+        reassociation for floats; the bulk path's final state is rebuilt by
+        bulk-evicting what would overflow and bulk-inserting the last
+        min(T, window) inputs — a valid state with identical window contents
+        (and therefore identical query results and future behaviour), not a
+        bit-identical internal layout.
         """
         T = jax.tree.leaves(xs)[0].shape[0]
         if chunked is None:
-            chunked = T >= CHUNKED_AUTO_MIN_T and self._is_concretely_empty(state)
+            chunked = False
+            if T >= CHUNKED_AUTO_MIN_T:
+                sizes = self._concrete_sizes(state)
+                chunked = sizes is not None and bool((sizes <= window).all())
         if chunked:
             return self._stream_chunked(state, xs, window, chunk)
 
@@ -149,25 +172,37 @@ class BatchedSWAG:
 
         return jax.lax.scan(scan_step, state, xs)
 
-    def _is_concretely_empty(self, state: PyTree) -> bool:
+    def _concrete_sizes(self, state: PyTree):
         try:
-            return bool((np.asarray(self.size(state)) == 0).all())
+            return np.asarray(self.size(state))
         except (jax.errors.TracerArrayConversionError, jax.errors.ConcretizationTypeError):
-            return False  # traced under jit: stay on the per-element path
+            return None  # traced under jit: stay on the per-element path
 
     def _stream_chunked(self, state: PyTree, xs: PyTree, window: int, chunk):
         from repro.core.chunked import ChunkedStream  # local: avoid cycle
 
         key = (window, chunk)
-        engine = self._chunked_engines.get(key)
-        if engine is None:  # cache: the engine holds the jitted chunk fn
-            engine = self._chunked_engines[key] = ChunkedStream(
-                self.monoid, window, chunk
+        cached = self._chunked_engines.get(key)
+        if cached is None:  # cache: the engine + jitted carry extraction
+            engine = ChunkedStream(self.monoid, window, chunk)
+            carry_fn = jax.jit(
+                lambda st: engine.init_carry(from_state=st, algo=self.algo)
             )
-        ys = engine.stream(xs)
-        # Final state: the window holds the last min(T, window) inputs.
+            cached = self._chunked_engines[key] = (engine, carry_fn)
+        engine, carry_fn = cached
+        ys = engine.stream(xs, carry=carry_fn(state))
+        # Final state: same window contents as the per-element scan.
         T = jax.tree.leaves(xs)[0].shape[0]
-        n = min(T, window)
-        last = jax.tree.map(lambda a: a[T - n:], xs)
-        state = self._bulk_insert(state, last)
+        if T >= window:
+            # the stream replaces the whole window — build a fresh state from
+            # the last `window` inputs, fully vectorized (no sequential loop)
+            last = jax.tree.map(lambda a: a[T - window:], xs)
+            state = self._state_from_chunk(last)
+        else:
+            # partial refresh (window > T ≥ CHUNKED_AUTO_MIN_T): evict
+            # per-lane what the inserts would overflow, then bulk-insert —
+            # evict-first also keeps every lane within the ring capacity
+            k = jnp.maximum(self.size(state) + T - window, 0)
+            state = self._bulk_evict(state, k)
+            state = self._bulk_insert(state, xs)
         return state, ys

@@ -27,13 +27,15 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import swag_base
 from repro.core.monoids import Monoid
 from repro.core.swag_base import (
     chunk_length,
     chunk_suffix_scan,
+    suffix_scan,
     tree_index,
 )
-from repro.kernels.ops_registry import combine_fn, op_for_monoid
+from repro.kernels.ops_registry import combine_fn, identity_for, op_for_monoid
 from repro.kernels.sliding_window.kernel import sliding_window_pallas
 from repro.kernels.suffix_scan.kernel import suffix_scan_pallas
 
@@ -50,11 +52,8 @@ def _axis1_prefix_scan(monoid: Monoid, blocks: PyTree) -> PyTree:
 
 
 def _axis1_suffix_scan(monoid: Monoid, blocks: PyTree) -> PyTree:
-    flipped = jax.tree.map(lambda a: jnp.flip(a, 1), blocks)
-    out = jax.lax.associative_scan(
-        lambda a, b: monoid.combine(b, a), flipped, axis=1
-    )
-    return jax.tree.map(lambda a: jnp.flip(a, 1), out)
+    # operand-order discipline lives in swag_base.suffix_scan
+    return suffix_scan(monoid.combine, blocks, axis=1)
 
 
 def tree_sliding_window(monoid: Monoid, lifted: PyTree, window: int) -> PyTree:
@@ -130,7 +129,10 @@ class ChunkedStream:
     :mod:`repro.kernels.ops_registry`) the intra-chunk passes run on the
     Pallas ``sliding_window``/``suffix_scan`` kernels; any other monoid uses
     the generic ``associative_scan`` path.  The carry is a per-lane tail of
-    ``window - 1`` suffix aggregates — the engine never stores raw history.
+    ``window - 1`` suffix aggregates — the engine never stores raw history —
+    and can be initialized cold (identity) or WARM from any live SWAG state
+    via ``init_carry(from_state=..., algo=...)`` (the warm-state carry
+    protocol, :mod:`repro.core.swag_base`).
     """
 
     def __init__(
@@ -154,14 +156,44 @@ class ChunkedStream:
         self.interpret = interpret
         self.block_b = block_b
         self._jitted_pc = jax.jit(self._process_chunk_impl)
+        self._full_masks: dict = {}
 
     # -- carry ------------------------------------------------------------
 
-    def init_carry(self, batch: int) -> PyTree:
-        """Tail of suffix aggregates of the last window-1 elements (per lane),
-        identity-filled: missing history combines away exactly (= the
-        front-truncated fill semantics)."""
+    def init_carry(
+        self,
+        batch: Optional[int] = None,
+        *,
+        from_state: Optional[PyTree] = None,
+        algo=None,
+    ) -> PyTree:
+        """Tail of suffix aggregates of the last window-1 elements (per lane).
+
+        Cold start (``from_state=None``): identity-filled, so missing history
+        combines away exactly (= the front-truncated fill semantics).
+
+        Warm start: pass a *batched* live SWAG state (leading lane axis, as
+        built by ``BatchedSWAG.init``) plus its algorithm module, and the
+        carry is extracted through the warm-carry protocol
+        (:func:`repro.core.swag_base.state_to_carry`) — the stream then
+        continues the live window instead of restarting from empty.  Lane
+        sizes may be ragged; each lane is front-truncated independently.
+        """
         h = self.window - 1
+        if from_state is not None:
+            if algo is None:
+                raise ValueError("init_carry(from_state=...) needs algo=")
+            tails = jax.vmap(
+                lambda s: swag_base.state_to_carry(
+                    algo, self.monoid, s, self.window
+                )
+            )(from_state)  # (B, h, ...)-leading
+            if self.op is not None:
+                return tails  # kernel carry layout is (batch, h)
+            # generic carry layout is (h, batch, ...)
+            return jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), tails)
+        if batch is None:
+            raise ValueError("init_carry needs batch= (or from_state=)")
         ident = self.monoid.identity()
         if self.op is not None:
             ident = jnp.asarray(ident)
@@ -172,22 +204,47 @@ class ChunkedStream:
 
     # -- one chunk ---------------------------------------------------------
 
-    def process_chunk(self, carry: PyTree, xs: PyTree):
-        """Consume a (C, B) chunk of raw inputs; returns (carry, (C, B) aggs)."""
-        return self._jitted_pc(carry, xs)
+    def process_chunk(self, carry: PyTree, xs: PyTree, mask=None):
+        """Consume a (C, B) chunk of raw inputs; returns (carry, (C, B) aggs).
 
-    def _process_chunk_impl(self, carry, xs):
+        ``mask`` is an optional (C,) bool array; False positions enter the
+        window as the monoid identity (their output rows are meaningless —
+        slice them off).  It exists to pad a ragged FINAL chunk up to the
+        engine's static chunk length without a fresh jit trace: the returned
+        carry treats masked positions as real identity elements, so only mask
+        when no further chunks follow.  A full mask is always passed to the
+        jitted function so full and padded chunks share one compilation.
+        """
+        if mask is None:
+            mask = self._full_mask(chunk_length(xs))
+        return self._jitted_pc(carry, xs, mask)
+
+    def chunk_fn(self, carry: PyTree, xs: PyTree, mask=None):
+        """Unjitted :meth:`process_chunk` body — pure, for composing into a
+        caller's own ``jit`` (e.g. the telemetry layer's fused observe)."""
+        return self._process_chunk_impl(carry, xs, mask)
+
+    def _full_mask(self, C: int):
+        m = self._full_masks.get(C)
+        if m is None:
+            m = self._full_masks[C] = jnp.ones((C,), bool)
+        return m
+
+    def _process_chunk_impl(self, carry, xs, mask=None):
         if self.op is not None:
-            return self._chunk_kernel(carry, xs)
-        return self._chunk_generic(carry, xs)
+            return self._chunk_kernel(carry, xs, mask)
+        return self._chunk_generic(carry, xs, mask)
 
-    def _chunk_kernel(self, tail, xs):
+    def _chunk_kernel(self, tail, xs, mask=None):
         m = self.monoid
         lifted = jax.vmap(jax.vmap(m.lift))(xs)  # (C, B) scalar Agg
         if lifted.ndim != 2:
             raise ValueError(
                 f"kernel path needs scalar aggregates, got shape {lifted.shape}"
             )
+        if mask is not None:
+            ident = jnp.asarray(identity_for(self.op, lifted.dtype), lifted.dtype)
+            lifted = jnp.where(mask[:, None], lifted, ident)
         x = lifted.T  # (B, C) for the kernels
         C = x.shape[1]
         w, h = self.window, min(self.window - 1, x.shape[1])
@@ -208,9 +265,20 @@ class ChunkedStream:
                 tail = jnp.concatenate([comb(tail[:, C:], ss[:, :1]), ss], axis=1)
         return tail, y.T
 
-    def _chunk_generic(self, tail, xs):
+    def _chunk_generic(self, tail, xs, mask=None):
         m = self.monoid
         lifted = jax.vmap(jax.vmap(m.lift))(xs)  # (C, B, ...) Agg pytree
+        if mask is not None:
+            ident = m.identity()
+            lifted = jax.tree.map(
+                lambda a, i: jnp.where(
+                    mask.reshape((-1,) + (1,) * (a.ndim - 1)),
+                    a,
+                    jnp.asarray(i, a.dtype),
+                ),
+                lifted,
+                ident,
+            )
         C = chunk_length(lifted)
         w, h = self.window, min(self.window - 1, chunk_length(lifted))
         y = tree_sliding_window(m, lifted, w)
@@ -236,16 +304,37 @@ class ChunkedStream:
 
     # -- whole stream ------------------------------------------------------
 
-    def stream(self, xs: PyTree) -> PyTree:
-        """Aggregate a whole (T, B) stream chunk-by-chunk; returns (T, B) aggs."""
+    def stream(self, xs: PyTree, *, carry: Optional[PyTree] = None) -> PyTree:
+        """Aggregate a whole (T, B) stream chunk-by-chunk; returns (T, B) aggs.
+
+        ``carry`` continues from an existing tail (see :meth:`init_carry`'s
+        ``from_state=`` path for warm windows); default is a cold start.  A
+        ragged last chunk is padded to ``self.chunk`` with the monoid
+        identity under a mask, so every chunk — ragged included — reuses the
+        single ``process_chunk`` compilation.
+        """
         T = chunk_length(xs)
         batch = jax.tree.leaves(xs)[0].shape[1]
         if T == 0:  # match the per-element scan: well-formed empty (0, B) aggs
             return jax.vmap(jax.vmap(self.monoid.lift))(xs)
-        carry = self.init_carry(batch)
+        if carry is None:
+            carry = self.init_carry(batch)
         ys = []
         for lo in range(0, T, self.chunk):
-            piece = jax.tree.map(lambda a: a[lo: lo + self.chunk], xs)
-            carry, y = self.process_chunk(carry, piece)
+            hi = min(lo + self.chunk, T)
+            piece = jax.tree.map(lambda a: a[lo:hi], xs)
+            if hi - lo < self.chunk:  # final ragged chunk: pad + mask
+                pad = self.chunk - (hi - lo)
+                piece = jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])], 0
+                    ),
+                    piece,
+                )
+                mask = jnp.arange(self.chunk) < (hi - lo)
+                carry, y = self.process_chunk(carry, piece, mask)
+                y = jax.tree.map(lambda a: a[: hi - lo], y)
+            else:
+                carry, y = self.process_chunk(carry, piece)
             ys.append(y)
         return jax.tree.map(lambda *parts: jnp.concatenate(parts, axis=0), *ys)

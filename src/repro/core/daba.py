@@ -30,13 +30,18 @@ import dataclasses
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core.monoids import Monoid
 from repro.core.swag_base import (
     alloc_ring,
+    chunk_length,
     i32,
     lazy_cond,
+    ring_gather,
     ring_get,
     ring_set,
+    suffix_carry_from_regions,
     swag_state,
 )
 
@@ -168,3 +173,42 @@ def insert(monoid: Monoid, state: DabaState, value) -> DabaState:
 def evict(monoid: Monoid, state: DabaState) -> DabaState:
     s = _replace(state, f=state.f + 1)
     return _fixup(monoid, s)
+
+
+# --- warm-carry protocol ----------------------------------------------------
+
+
+def state_to_carry(monoid: Monoid, state: DabaState, window: int):
+    """Warm-carry extraction: same sublist regions as DABA Lite, with the
+    ``vals`` ring supplying raw values and ``aggs`` the partial aggregates
+    ([B,E) agg slots aggregate leftward-from-B and are bypassed in favour of
+    the raw vals)."""
+    length = state.capacity + 1
+    raw_log = ring_gather(state.vals, state.f, state.capacity, length)
+    agg_log = ring_gather(state.aggs, state.f, state.capacity, length)
+    f = state.f
+    return suffix_carry_from_regions(
+        monoid, raw_log, agg_log, state.e - f,
+        state.l - f, state.r - f, state.a - f, state.b - f, window,
+    )
+
+
+def carry_to_state(monoid: Monoid, carry, capacity: int) -> DabaState:
+    """Carry import with the same F = 0, L = R = A = 1, B = E = h layout as
+    DABA Lite.  The pseudo slots' ``vals`` are never read (shrink only reads
+    vals inside l_R, which after any flip consists of genuinely-raw inserted
+    values), but are filled with the carry for definiteness."""
+    h = chunk_length(carry)
+    if h > capacity:
+        raise ValueError(f"carry of {h} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if h == 0:
+        return state
+    idx = jnp.arange(h, dtype=jnp.int32)
+    filled = jax.tree.map(lambda a, c: a.at[idx].set(c), state.aggs, carry)
+    vals = jax.tree.map(lambda a, c: a.at[idx].set(c), state.vals, carry)
+    inner = i32(min(1, h))
+    return _replace(
+        state, vals=vals, aggs=filled,
+        l=inner, r=inner, a=inner, b=i32(h), e=i32(h),
+    )

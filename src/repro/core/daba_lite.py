@@ -32,8 +32,10 @@ from repro.core.swag_base import (
     lazy_cond,
     lazy_fori,
     lift_chunk,
+    ring_gather,
     ring_get,
     ring_set,
+    suffix_carry_from_regions,
     swag_state,
     tree_index,
 )
@@ -161,6 +163,44 @@ def insert(monoid: Monoid, state: DabaLiteState, value) -> DabaLiteState:
 def evict(monoid: Monoid, state: DabaLiteState) -> DabaLiteState:
     s = _replace(state, f=state.f + 1)
     return _fixup(monoid, s)
+
+
+# --- warm-carry protocol ----------------------------------------------------
+
+
+def state_to_carry(monoid: Monoid, state: DabaLiteState, window: int):
+    """Warm-carry extraction straight from the sublist invariants: [F,L) and
+    [A,B) hold fold-to-B aggregates, [L,R) fold-to-R, [R,A) and [B,E) raw
+    values — exactly the region layout of the shared helper, with the deque
+    serving as both the raw and the aggregate ring."""
+    length = state.capacity + 1
+    log = ring_gather(state.deque, state.f, state.capacity, length)
+    f = state.f
+    return suffix_carry_from_regions(
+        monoid, log, log, state.e - f,
+        state.l - f, state.r - f, state.a - f, state.b - f, window,
+    )
+
+
+def carry_to_state(monoid: Monoid, carry, capacity: int) -> DabaLiteState:
+    """Exact carry import: the carry entries are fold-to-B suffix aggregates,
+    which is precisely what l_F and l_A slots hold.  Lay the carry out as
+    F = 0, L = R = A = 1, B = E = h: |l_L| = |l_R| = 0 and
+    |l_L| + |l_R| + |l_A| + 1 = h = |l_F| − |l_B| satisfy the DABA size
+    invariants, so insert/evict/query continue unperturbed."""
+    h = chunk_length(carry)
+    if h > capacity:
+        raise ValueError(f"carry of {h} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if h == 0:
+        return state
+    idx = jnp.arange(h, dtype=jnp.int32)
+    deque = jax.tree.map(lambda a, c: a.at[idx].set(c), state.deque, carry)
+    inner = i32(min(1, h))
+    return _replace(
+        state, deque=deque,
+        l=inner, r=inner, a=inner, b=i32(h), e=i32(h),
+    )
 
 
 # --- bulk ops (chunked streaming protocol) ---------------------------------

@@ -558,6 +558,51 @@ def matrix_monoid(k: int = 2, dtype=jnp.float32) -> Monoid:
 
 
 # ---------------------------------------------------------------------------
+# Combinators
+# ---------------------------------------------------------------------------
+
+
+def product_monoid(members: dict[str, Monoid]) -> Monoid:
+    """Pointwise product of named monoids: Agg = {name: member Agg}.
+
+    One combined element carries N metrics, so a windowed-telemetry update is
+    a single monoid operation on a single state (one jitted dispatch) instead
+    of N separate windows.  ``lift``/``lower`` map dicts keyed like
+    ``members``; algebraic properties are the conjunction of the members'
+    (``inverse_front`` exists iff every member is invertible).
+    """
+    members = dict(members)
+
+    def identity():
+        return {k: m.identity() for k, m in members.items()}
+
+    def combine(a, b):
+        return {k: m.combine(a[k], b[k]) for k, m in members.items()}
+
+    def lift(e):
+        return {k: m.lift(e[k]) for k, m in members.items()}
+
+    def lower(v):
+        return {k: m.lower(v[k]) for k, m in members.items()}
+
+    invertible = all(m.invertible for m in members.values())
+
+    def inverse_front(agg, old):
+        return {k: m.inverse_front(agg[k], old[k]) for k, m in members.items()}
+
+    return Monoid(
+        name="prod[" + ",".join(f"{k}={m.name}" for k, m in members.items()) + "]",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lower,
+        commutative=all(m.commutative for m in members.values()),
+        invertible=invertible,
+        inverse_front=inverse_front if invertible else None,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 

@@ -13,12 +13,18 @@ import jax
 from repro.core.monoids import Monoid
 from repro.core.swag_base import (
     alloc_ring,
+    chunk_length,
     i32,
     lazy_fori,
+    lift_chunk,
+    ring_gather,
     ring_get,
     ring_set,
+    suffix_carry_from_regions,
     swag_state,
 )
+
+import jax.numpy as jnp
 
 
 @swag_state
@@ -61,3 +67,26 @@ def query(monoid: Monoid, state: RecalcState):
         return monoid.combine(acc, ring_get(state.buf, state.front + i, state.capacity))
 
     return lazy_fori(0, state.end - state.front, body, monoid.identity())
+
+
+def state_to_carry(monoid: Monoid, state: RecalcState, window: int):
+    """Warm-carry extraction: the whole ring is raw lifted values — one
+    suffix scan (all region offsets 0)."""
+    length = state.capacity + 1
+    log = ring_gather(state.buf, state.front, state.capacity, length)
+    return suffix_carry_from_regions(
+        monoid, log, log, state.end - state.front, 0, 0, 0, 0, window
+    )
+
+
+def state_from_chunk(monoid: Monoid, values, capacity: int) -> RecalcState:
+    """Fresh state from a chunk: the ring stores raw lifted values, so the
+    chunk lands verbatim (no scan needed)."""
+    vs = lift_chunk(monoid, values)
+    k = chunk_length(vs)
+    if k > capacity:
+        raise ValueError(f"chunk of {k} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    idx = jnp.arange(k, dtype=jnp.int32)
+    buf = jax.tree.map(lambda a, v: a.at[idx].set(v), state.buf, vs)
+    return RecalcState(buf=buf, front=i32(0), end=i32(k), capacity=capacity)

@@ -9,8 +9,21 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
 from repro.core.monoids import Monoid
-from repro.core.swag_base import alloc_ring, i32, ring_get, ring_set, swag_state
+from repro.core.swag_base import (
+    alloc_ring,
+    carry_pseudo_elements,
+    chunk_length,
+    i32,
+    ring_gather,
+    ring_get,
+    ring_set,
+    suffix_carry_from_regions,
+    swag_state,
+    tree_index,
+)
 
 
 @swag_state
@@ -64,3 +77,57 @@ def evict(monoid: Monoid, state: SoeState) -> SoeState:
 
 def query(monoid: Monoid, state: SoeState):
     return state.agg
+
+
+def state_to_carry(monoid: Monoid, state: SoeState, window: int):
+    """Warm-carry extraction: the ring is raw lifted values — one suffix
+    scan (all region offsets 0); the running aggregate is not needed."""
+    length = state.capacity + 1
+    log = ring_gather(state.buf, state.front, state.capacity, length)
+    return suffix_carry_from_regions(
+        monoid, log, log, state.end - state.front, 0, 0, 0, 0, window
+    )
+
+
+def state_from_chunk(monoid: Monoid, values, capacity: int) -> SoeState:
+    """Fresh state from a chunk: raw lifted values plus one fold."""
+    from repro.core.swag_base import chunk_fold, lift_chunk
+
+    vs = lift_chunk(monoid, values)
+    k = chunk_length(vs)
+    if k > capacity:
+        raise ValueError(f"chunk of {k} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if k == 0:
+        return state
+    idx = jnp.arange(k, dtype=jnp.int32)
+    buf = jax.tree.map(lambda a, v: a.at[idx].set(v), state.buf, vs)
+    return SoeState(
+        buf=buf,
+        agg=chunk_fold(monoid, vs),
+        front=i32(0),
+        end=i32(k),
+        capacity=capacity,
+    )
+
+
+def carry_to_state(monoid: Monoid, carry, capacity: int) -> SoeState:
+    """Carry import via pseudo-elements ``g_t = carry[t] ⊖ carry[t+1]``
+    (soe is invertible by construction; commutativity is enforced by
+    :func:`~repro.core.swag_base.carry_pseudo_elements`)."""
+    h = chunk_length(carry)
+    if h > capacity:
+        raise ValueError(f"carry of {h} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if h == 0:
+        return state
+    g = carry_pseudo_elements(monoid, carry)
+    idx = jnp.arange(h, dtype=jnp.int32)
+    buf = jax.tree.map(lambda a, c: a.at[idx].set(c), state.buf, g)
+    return SoeState(
+        buf=buf,
+        agg=tree_index(carry, 0),
+        front=i32(0),
+        end=i32(h),
+        capacity=capacity,
+    )

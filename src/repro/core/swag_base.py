@@ -144,18 +144,31 @@ def chunk_prefix_scan(monoid: Monoid, lifted: PyTree) -> PyTree:
     return jax.lax.associative_scan(monoid.combine, lifted, axis=0)
 
 
+def suffix_scan(combine: Callable, tree: PyTree, axis: int = 0) -> PyTree:
+    """Inclusive suffix scan: ``out[i] = x_i ⊗ x_{i+1} ⊗ … ⊗ x_{n-1}``.
+
+    THE one place the non-commutative operand-order gotcha lives — every
+    suffix scan in the repo (:func:`chunk_suffix_scan`, the chunked engine's
+    block scans, the suffix_scan kernel oracle) goes through here.  This must
+    NOT be ``associative_scan(combine, x, reverse=True)``: that computes the
+    *reversed-operand* product ``x_{n-1} ⊗ … ⊗ x_i``, which silently corrupts
+    non-commutative monoids (argmax tie-breaks, m4 first/last, affine
+    composition).  Instead: flip the axis, scan with the combine's operands
+    swapped so the older element stays on the LEFT, and flip back.
+    """
+    flipped = jax.tree.map(lambda a: jnp.flip(a, axis), tree)
+    out = jax.lax.associative_scan(
+        lambda a, b: combine(b, a), flipped, axis=axis
+    )
+    return jax.tree.map(lambda a: jnp.flip(a, axis), out)
+
+
 def chunk_suffix_scan(monoid: Monoid, lifted: PyTree) -> PyTree:
     """Inclusive suffix scan along axis 0: out[i] = v_i ⊗ … ⊗ v_{k-1}.
 
-    NOT ``associative_scan(..., reverse=True)``: that computes the
-    reversed-operand product, which is wrong for non-commutative monoids.
-    Flip the axis and scan with the operands swapped instead.
+    See :func:`suffix_scan` for the non-commutative operand-order rule.
     """
-    flipped = jax.tree.map(lambda a: jnp.flip(a, 0), lifted)
-    out = jax.lax.associative_scan(
-        lambda a, b: monoid.combine(b, a), flipped, axis=0
-    )
-    return jax.tree.map(lambda a: jnp.flip(a, 0), out)
+    return suffix_scan(monoid.combine, lifted, axis=0)
 
 
 def chunk_fold(monoid: Monoid, lifted: PyTree) -> PyTree:
@@ -191,6 +204,243 @@ def evict_bulk(algo, monoid: Monoid, state: PyTree, k) -> PyTree:
     if fn is not None:
         return fn(monoid, state, k)
     return generic_evict_bulk(algo, monoid, state, k)
+
+
+# ---------------------------------------------------------------------------
+# Warm-state carry protocol (chunked streaming from live windows)
+# ---------------------------------------------------------------------------
+#
+# A :class:`repro.core.chunked.ChunkedStream` carry is the *tail* of suffix
+# aggregates of the window's last ``h = window - 1`` elements:
+#
+#     carry[t] = v_{n-(h-t)} ⊗ … ⊗ v_{n-1}       for t = 0 … h-1
+#
+# front-truncated: with fewer than ``h - t`` live elements it is the fold of
+# ALL of them (the monoid identity for an empty window).  Conversions
+#
+#     carry = state_to_carry(algo, monoid, state, window)   # (h,)-leading
+#     state = carry_to_state(algo, monoid, carry, capacity)
+#
+# let the chunked engine start from ANY live SWAG state (and a per-element
+# algorithm resume from a chunked carry).  Every algorithm in repro.core
+# exports specialized ``state_to_carry`` — one ring gather + one log-depth
+# suffix scan over :func:`suffix_carry_from_regions` — and, where its layout
+# permits, ``carry_to_state``; anything else conforms through the generic
+# fallbacks below (masked evict/query window-content extraction, and
+# pseudo-element insertion which needs an invertible commutative monoid).
+
+
+def ring_gather(buf: PyTree, front, capacity: int, length: int) -> PyTree:
+    """Read ``length`` consecutive ring elements starting at logical ``front``
+    into age order (index 0 = oldest).  Entries past the live region wrap and
+    must be masked by the caller."""
+    j = jnp.arange(length, dtype=jnp.int32)
+    idx = (jnp.asarray(front, jnp.int32) + j) % capacity
+    return jax.tree.map(lambda a: a[idx], buf)
+
+
+def suffix_carry_from_regions(
+    monoid: Monoid,
+    raw_log: PyTree,
+    agg_log: PyTree,
+    n,
+    off_l,
+    off_r,
+    off_a,
+    off_b,
+    window: int,
+) -> PyTree:
+    """Carry from the DABA-family sublist layout, in one log-depth scan.
+
+    ``raw_log``/``agg_log`` are the state's rings in age order (index 0 =
+    oldest live element; entries at ``j >= n`` are ignored).  The logical
+    offsets mirror the F ≤ L ≤ R ≤ A ≤ B ≤ E pointer chain relative to F:
+
+      * ``[off_r, off_a)`` and ``[off_b, n)`` hold RAW lifted values,
+      * slot ``off_a`` (when ``off_a < off_b``) holds Π_A = fold to B,
+      * ``[off_l, off_r)`` holds fold-to-R aggregates,
+      * everything else live holds fold-to-B aggregates.
+
+    Degenerate layouts reuse this directly: two_stacks_lite passes
+    ``off_l = off_r = off_a = off_b`` (front aggregates + raw back) and
+    recalc/soe pass all offsets 0 (everything raw).  The suffix-to-end of
+    element j is assembled as raw-scan value, ``agg[j] ⊗ suffix(R)``, or
+    ``agg[j] ⊗ Π_B`` depending on region; the carry gathers the suffixes of
+    the last ``window - 1`` elements, front-truncated.
+    """
+    h = int(window) - 1
+    ident = monoid.identity()
+    L = chunk_length(raw_log)
+    j = jnp.arange(L, dtype=jnp.int32)
+    n = i32(n)
+    off_l, off_r, off_a, off_b = i32(off_l), i32(off_r), i32(off_a), i32(off_b)
+
+    def bc(mask, a):
+        return mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+
+    live = j < n
+    use_raw = live & (((j >= off_r) & (j < off_a)) | (j >= off_b))
+    use_agg = live & (j == off_a) & (off_a < off_b)
+    scan_vals = jax.tree.map(
+        lambda raw, agg, i: jnp.where(
+            bc(use_raw, raw),
+            raw,
+            jnp.where(bc(use_agg, raw), agg, jnp.asarray(i, raw.dtype)),
+        ),
+        raw_log,
+        agg_log,
+        ident,
+    )
+    sb = suffix_scan(monoid.combine, scan_vals, axis=0)
+    s_r = tree_index(sb, off_r)  # suffix fold from R to the end
+    s_b = tree_index(sb, off_b)  # fold of l_B (the raw back values)
+    with_b = jax.vmap(monoid.combine, in_axes=(0, None))(agg_log, s_b)
+    with_r = jax.vmap(monoid.combine, in_axes=(0, None))(agg_log, s_r)
+
+    in_scan = use_raw | use_agg
+    mid = live & (j >= off_l) & (j < off_r)
+    suffix = jax.tree.map(
+        lambda sc, wr, wb, i: jnp.where(
+            bc(in_scan, sc),
+            sc,
+            jnp.where(
+                bc(mid, sc),
+                wr,
+                jnp.where(bc(live, sc), wb, jnp.asarray(i, sc.dtype)),
+            ),
+        ),
+        sb,
+        with_r,
+        with_b,
+        ident,
+    )
+    t = jnp.arange(h, dtype=jnp.int32)
+    return jax.tree.map(lambda a: a[jnp.maximum(n - h + t, 0)], suffix)
+
+
+def generic_state_to_carry(algo, monoid: Monoid, state: PyTree, window: int) -> PyTree:
+    """Fallback carry extraction: masked evict+query sweeps.
+
+    Works for ANY algorithm exposing the functional protocol, at
+    O(capacity + window) sequential evicts (each worst-case O(1) for the
+    paper's algorithms) — the per-algorithm specializations do the same in
+    one gather + one log-depth scan.  Also serves as the oracle for them.
+    """
+    h = int(window) - 1
+    ident = monoid.identity()
+    buf = jax.tree.map(lambda i: jnp.broadcast_to(i, (h,) + i.shape), ident)
+    if h == 0:
+        return buf
+    cap = state.capacity
+
+    def trim(_, s):
+        return lazy_cond(
+            algo.size(s) > h, lambda x: algo.evict(monoid, x), lambda x: x, s
+        )
+
+    s = lazy_fori(0, max(cap - h, 0), trim, state)
+
+    def body(t, carry):
+        s, buf = carry
+        q = algo.query(monoid, s)
+        buf = jax.tree.map(lambda a, v: a.at[t].set(v), buf, q)
+        s = lazy_cond(
+            algo.size(s) > h - t - 1,
+            lambda x: algo.evict(monoid, x),
+            lambda x: x,
+            s,
+        )
+        return s, buf
+
+    _, buf = lazy_fori(0, h, body, (s, buf))
+    return buf
+
+
+def carry_pseudo_elements(monoid: Monoid, carry: PyTree) -> PyTree:
+    """Per-element contributions g_t with ``carry[t] = g_t ⊗ carry[t+1]``.
+
+    Recoverable only with an inverse AND commutativity: ``inverse_front``
+    removes the *front* element, but here it must strip the *suffix*
+    ``carry[t+1]`` — order-safe only when ⊗ commutes.  Raises for anything
+    else (a silently wrong window would be worse)."""
+    if not (monoid.invertible and monoid.commutative):
+        raise NotImplementedError(
+            f"carry pseudo-elements need an invertible commutative monoid "
+            f"(got {monoid.name}); use an algorithm with a specialized "
+            f"carry_to_state (two_stacks/two_stacks_lite/daba/daba_lite)"
+        )
+    ident = monoid.identity()
+    nxt = jax.tree.map(
+        lambda a, i: jnp.concatenate(
+            [a[1:], jnp.asarray(i, a.dtype)[None]], axis=0
+        ),
+        carry,
+        ident,
+    )
+    return jax.vmap(monoid.inverse_front)(carry, nxt)
+
+
+def generic_carry_to_state(algo, monoid: Monoid, carry: PyTree, capacity: int) -> PyTree:
+    """Fallback state construction: pseudo-element insertion.
+
+    The :func:`carry_pseudo_elements` g_t are inserted as pre-lifted values.
+    Algorithms whose layout stores suffix aggregates directly (two_stacks,
+    two_stacks_lite, daba, daba_lite) export exact specializations instead
+    and never hit the invertible+commutative restriction.
+    """
+    state = algo.init(monoid, capacity)
+    h = chunk_length(carry)
+    if h == 0:
+        return state
+    g = carry_pseudo_elements(monoid, carry)
+    prelifted = dataclasses.replace(
+        monoid, name=monoid.name + "#prelifted", lift=lambda v: v
+    )
+    return insert_bulk(algo, prelifted, state, g)
+
+
+def state_to_carry(algo, monoid: Monoid, state: PyTree, window: int) -> PyTree:
+    """Convert a live SWAG state into a chunked-stream carry; dispatches to
+    the algorithm's specialized conversion when it has one."""
+    fn = getattr(algo, "state_to_carry", None)
+    if fn is not None:
+        return fn(monoid, state, window)
+    return generic_state_to_carry(algo, monoid, state, window)
+
+
+def carry_to_state(algo, monoid: Monoid, carry: PyTree, capacity: int) -> PyTree:
+    """Build a live SWAG state whose window suffixes equal ``carry``.
+
+    The reconstructed state represents the window *as the carry sees it*:
+    ``len(carry)`` elements whose suffix folds are the carry entries — exact
+    when the source window held ≥ window-1 elements (shorter histories are
+    carried as duplicated front-truncated folds)."""
+    fn = getattr(algo, "carry_to_state", None)
+    if fn is not None:
+        return fn(monoid, carry, capacity)
+    return generic_carry_to_state(algo, monoid, carry, capacity)
+
+
+def state_from_chunk(algo, monoid: Monoid, values: PyTree, capacity: int) -> PyTree:
+    """Fresh state holding exactly the chunk contents — fully vectorized.
+
+    The chunked stream's final-state rebuild: one log-depth suffix scan of
+    the lifted chunk IS a valid carry of length k, and ``carry_to_state``
+    lays it out with no per-element loop (recalc/soe skip even the scan and
+    store the raw values directly).  Algorithms without either specialization
+    fall back to ``insert_bulk`` into an empty state.  Equivalent to k
+    inserts into a fresh state (exact for integer monoids, reassociated for
+    floats); requires k ≤ capacity.
+    """
+    fn = getattr(algo, "state_from_chunk", None)
+    if fn is not None:
+        return fn(monoid, values, capacity)
+    fn = getattr(algo, "carry_to_state", None)
+    if fn is not None:
+        return fn(
+            monoid, chunk_suffix_scan(monoid, lift_chunk(monoid, values)), capacity
+        )
+    return insert_bulk(algo, monoid, algo.init(monoid, capacity), values)
 
 
 # ---------------------------------------------------------------------------

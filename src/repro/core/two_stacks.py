@@ -23,7 +23,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.monoids import Monoid
-from repro.core.swag_base import alloc_ring, i32, lazy_cond, lazy_fori, swag_state
+from repro.core.swag_base import (
+    alloc_ring,
+    chunk_length,
+    i32,
+    lazy_cond,
+    lazy_fori,
+    suffix_carry_from_regions,
+    swag_state,
+)
 
 PyTree = object
 
@@ -148,5 +156,53 @@ def evict(monoid: Monoid, state: TwoStacksState) -> TwoStacksState:
         b_vals=state.b_vals,
         b_aggs=state.b_aggs,
         b_size=state.b_size,
+        capacity=state.capacity,
+    )
+
+
+# --- warm-carry protocol ----------------------------------------------------
+
+
+def state_to_carry(monoid: Monoid, state: TwoStacksState, window: int):
+    """Warm-carry extraction.  In age order the window is the front stack
+    read top-down (``f_vals[f_size-1-j]``) followed by the back stack
+    bottom-up; front aggs fold from each element to the front/back boundary
+    (= "to B"), the back supplies raw values — the two_stacks_lite region
+    shape with L = R = A = B = f_size."""
+    cap = state.capacity
+    length = cap + 1
+    j = jnp.arange(length, dtype=jnp.int32)
+    fi = jnp.clip(state.f_size - 1 - j, 0, cap - 1)
+    bi = jnp.clip(j - state.f_size, 0, cap - 1)
+    agg_log = jax.tree.map(lambda a: a[fi], state.f_aggs)
+    raw_log = jax.tree.map(lambda a: a[bi], state.b_vals)
+    d = state.f_size
+    return suffix_carry_from_regions(
+        monoid, raw_log, agg_log, state.f_size + state.b_size,
+        d, d, d, d, window,
+    )
+
+
+def carry_to_state(monoid: Monoid, carry, capacity: int) -> TwoStacksState:
+    """Exact carry import: the carry entries are suffix folds, i.e. a fully
+    flipped front stack (top = oldest) with an empty back.  The front vals
+    are pseudo (a flip never touches them; only ``b_vals`` is read)."""
+    h = chunk_length(carry)
+    if h > capacity:
+        raise ValueError(f"carry of {h} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if h == 0:
+        return state
+    idx = jnp.arange(h, dtype=jnp.int32)
+    flipped = jax.tree.map(lambda c: jnp.flip(c, 0), carry)
+    f_aggs = jax.tree.map(lambda a, c: a.at[idx].set(c), state.f_aggs, flipped)
+    f_vals = jax.tree.map(lambda a, c: a.at[idx].set(c), state.f_vals, flipped)
+    return TwoStacksState(
+        f_vals=f_vals,
+        f_aggs=f_aggs,
+        f_size=i32(h),
+        b_vals=state.b_vals,
+        b_aggs=state.b_aggs,
+        b_size=i32(0),
         capacity=state.capacity,
     )

@@ -27,8 +27,10 @@ from repro.core.swag_base import (
     lazy_cond,
     lazy_fori,
     lift_chunk,
+    ring_gather,
     ring_get,
     ring_set,
+    suffix_carry_from_regions,
     swag_state,
 )
 
@@ -148,6 +150,32 @@ def insert_bulk(monoid: Monoid, state: TwoStacksLiteState, values) -> TwoStacksL
         agg_b=monoid.combine(state.agg_b, chunk_fold(monoid, vs)),
         e=state.e + k,
     )
+
+
+def state_to_carry(monoid: Monoid, state: TwoStacksLiteState, window: int):
+    """Warm-carry extraction: the front sublist already stores fold-to-B
+    suffix aggregates, the back stores raw values — one degenerate-pointer
+    call into the shared region helper (L = R = A = B)."""
+    length = state.capacity + 1
+    log = ring_gather(state.deque, state.f, state.capacity, length)
+    d = state.b - state.f
+    return suffix_carry_from_regions(
+        monoid, log, log, state.e - state.f, d, d, d, d, window
+    )
+
+
+def carry_to_state(monoid: Monoid, carry, capacity: int) -> TwoStacksLiteState:
+    """Exact carry import: the carry IS a front sublist (suffix aggregates
+    fold-to-B), so it lands in the deque verbatim with an empty back."""
+    h = chunk_length(carry)
+    if h > capacity:
+        raise ValueError(f"carry of {h} elements exceeds capacity {capacity}")
+    state = init(monoid, capacity)
+    if h == 0:
+        return state
+    idx = jnp.arange(h, dtype=jnp.int32)
+    deque = jax.tree.map(lambda a, c: a.at[idx].set(c), state.deque, carry)
+    return _replace(state, deque=deque, b=i32(h), e=i32(h))
 
 
 def evict_bulk(monoid: Monoid, state: TwoStacksLiteState, k) -> TwoStacksLiteState:

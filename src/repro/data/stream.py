@@ -5,9 +5,13 @@ exactly the batches it would have seen — the data-side half of
 checkpoint-restart fault tolerance (no shuffle-buffer state to persist).
 
 ``WindowedStreamStats`` runs the paper's aggregators over the live stream:
-Bloom-filter windowed dedup (non-invertible OR monoid ⇒ DABA required) and
-min/max/mean token statistics for normalization — the data-pipeline
-integration of the sliding-window technique.
+Bloom-filter windowed dedup (non-invertible OR monoid) and min/max/mean
+token statistics for normalization.  All four metrics live in ONE
+:class:`repro.core.telemetry.WindowedTelemetry` product-monoid state, so an
+``observe_batch`` is a single jitted dispatch (the per-batch token
+reductions are fused into it) and a snapshot is one host transfer — the old
+implementation ran four separate DABA loops and ``float()``-synced each
+metric individually.
 """
 
 from __future__ import annotations
@@ -18,8 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import daba_lite
 from repro.core.monoids import bloom_monoid, bloom_contains, mean_monoid, min_monoid, max_monoid
+from repro.core.telemetry import WindowedTelemetry
 from repro.models.common import ModelConfig
 
 
@@ -66,49 +70,55 @@ class SyntheticStream:
 
 
 class WindowedStreamStats:
-    """Sliding-window stream statistics maintained by DABA Lite.
+    """Sliding-window stream statistics on the unified telemetry layer.
 
     * ``doc_bloom``: Bloom filter over the last ``window`` document hashes —
       windowed dedup (was this document seen in the recent stream?).
     * ``tok_mean`` / ``tok_min`` / ``tok_max``: windowed per-batch token
       statistics for normalization / drift monitoring.
+
+    One :class:`WindowedTelemetry` product-monoid state holds all four
+    windows; ``observe_batch`` — token reductions included — is exactly one
+    jitted device dispatch, and ``snapshot`` one host transfer.
     """
 
     def __init__(self, window: int = 256, bloom_words: int = 64):
         self.window = window
-        self.m_bloom = bloom_monoid(bloom_words)
-        self.m_mean = mean_monoid()
-        self.m_min = min_monoid()
-        self.m_max = max_monoid()
-        cap = window + 1
-        self.bloom = daba_lite.init(self.m_bloom, cap)
-        self.mean = daba_lite.init(self.m_mean, cap)
-        self.min = daba_lite.init(self.m_min, cap)
-        self.max = daba_lite.init(self.m_max, cap)
 
-    def _slide(self, m, st, v):
-        st = daba_lite.insert(m, st, v)
-        if int(daba_lite.size(st)) > self.window:
-            st = daba_lite.evict(m, st)
-        return st
+        def prepare(raw):
+            tf = raw["tokens"].astype(jnp.float32)
+            return {
+                "doc_bloom": raw["doc_id"],
+                "tok_mean": tf.mean(),
+                "tok_min": tf.min(),
+                "tok_max": tf.max(),
+            }
+
+        self.telem = WindowedTelemetry(
+            {
+                "doc_bloom": bloom_monoid(bloom_words),
+                "tok_mean": mean_monoid(),
+                "tok_min": min_monoid(),
+                "tok_max": max_monoid(),
+            },
+            window,
+            prepare=prepare,
+        )
 
     def observe_batch(self, tokens: jax.Array, doc_id: int) -> dict:
-        tf = tokens.astype(jnp.float32)
-        self.bloom = self._slide(self.m_bloom, self.bloom, jnp.asarray(doc_id))
-        self.mean = self._slide(self.m_mean, self.mean, tf.mean())
-        self.min = self._slide(self.m_min, self.min, tf.min())
-        self.max = self._slide(self.m_max, self.max, tf.max())
+        self.telem.observe(
+            {"tokens": tokens, "doc_id": jnp.asarray(doc_id, jnp.int32)}
+        )
         return self.snapshot()
 
     def seen_recently(self, doc_id: int) -> bool:
-        filt = daba_lite.query(self.m_bloom, self.bloom)
-        return bool(bloom_contains(filt, jnp.asarray(doc_id)))
+        filt = self.telem.aggregate("doc_bloom")  # live windowed Bloom filter
+        return bool(bloom_contains(filt, jnp.asarray(doc_id, jnp.int32)))
 
     def snapshot(self) -> dict:
+        s = self.telem.snapshot()
         return {
-            "win_tok_mean": float(
-                self.m_mean.lower(daba_lite.query(self.m_mean, self.mean))
-            ),
-            "win_tok_min": float(daba_lite.query(self.m_min, self.min)),
-            "win_tok_max": float(daba_lite.query(self.m_max, self.max)),
+            "win_tok_mean": float(s["tok_mean"]),
+            "win_tok_min": float(s["tok_min"]),
+            "win_tok_max": float(s["tok_max"]),
         }

@@ -3,15 +3,12 @@
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.swag_base import suffix_scan
 from repro.kernels.ops_registry import combine_fn
 
 
 def suffix_scan_ref(x: jax.Array, *, op: str = "sum") -> jax.Array:
-    comb = combine_fn(op)
-    # associative_scan over the reversed axis; operand order must be
-    # older-LEFT after un-reversing, so flip the combine's arguments.
-    rev = jnp.flip(x, axis=-1)
-    scanned = jax.lax.associative_scan(lambda a, b: comb(b, a), rev, axis=-1)
-    return jnp.flip(scanned, axis=-1)
+    # one shared implementation carries the non-commutative operand-order
+    # rule (see swag_base.suffix_scan)
+    return suffix_scan(combine_fn(op), x, axis=-1)

@@ -9,17 +9,25 @@ in lock-step — the standard continuous-batching pattern.  Finished sequences
 The decode step is the latency-critical path: for the windowed-state archs
 (rwkv6 / zamba2 long-context) its per-token cost is worst-case O(1) monoid
 combines — the paper's guarantee surfacing as serve-tail-latency uniformity.
+
+Windowed serve telemetry rides on the unified telemetry layer: per-slot
+occupancy / retire-rate and decode-step latency over the last
+``telemetry_window`` engine steps live in ONE product-monoid state (a single
+extra jitted dispatch per step), surfaced via :meth:`DecodeEngine.telemetry`.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.monoids import max_monoid, mean_monoid
+from repro.core.telemetry import WindowedTelemetry
 from repro.models.common import ModelConfig
 from repro.models.transformer import DecodeSpec, build_model
 
@@ -35,10 +43,29 @@ class Request:
 
 
 class DecodeEngine:
-    def __init__(self, cfg: ModelConfig, params, batch_slots: int, cache_len: int):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        batch_slots: int,
+        cache_len: int,
+        telemetry_window: int = 128,
+    ):
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
+        # per-slot windowed serve stats: one B-lane product-monoid state,
+        # one jitted dispatch per engine step
+        self._telem = WindowedTelemetry(
+            {
+                "active": mean_monoid(),       # per-slot occupancy fraction
+                "retired": mean_monoid(),      # per-slot retire rate / step
+                "decode_ms": mean_monoid(),    # decode-step latency (lock-step)
+                "decode_ms_max": max_monoid(),
+            },
+            telemetry_window,
+            batch=batch_slots,
+        )
         self.model = build_model(cfg)
         self.spec = DecodeSpec(
             cache_len=cache_len,
@@ -98,10 +125,13 @@ class DecodeEngine:
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
             return 0
+        t0 = time.perf_counter()
         logits, self.state = self._decode(self.params, self.state, self.cur_tok)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.cur_tok = nxt
-        nxt_np = np.asarray(nxt)
+        nxt_np = np.asarray(nxt)  # host sync: the decode step is complete
+        decode_ms = (time.perf_counter() - t0) * 1e3
+        retired_mask = np.zeros(self.B, np.float32)
         for i in active:
             req = self.slot_req[i]
             tok = int(nxt_np[i])
@@ -111,6 +141,17 @@ class DecodeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.retired.append(req)
+                retired_mask[i] = 1.0
+        active_mask = np.zeros(self.B, np.float32)
+        active_mask[active] = 1.0
+        self._telem.observe(
+            {
+                "active": jnp.asarray(active_mask),
+                "retired": jnp.asarray(retired_mask),
+                "decode_ms": jnp.float32(decode_ms),
+                "decode_ms_max": jnp.float32(decode_ms),
+            }
+        )
         return len(active)
 
     def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
@@ -122,3 +163,18 @@ class DecodeEngine:
             if n == 0 and not self.queue:
                 break
         return done
+
+    # -- windowed serve telemetry -----------------------------------------
+
+    def telemetry(self) -> dict:
+        """Windowed serve statistics over the last ``telemetry_window``
+        engine steps (one host transfer): per-slot occupancy and retire
+        rate, decode-step latency mean/max (ms).  All slots decode in
+        lock-step, so the latency window is shared across lanes."""
+        s = self._telem.snapshot()  # dict of (B,) arrays
+        return {
+            "slot_occupancy": np.asarray(s["active"]),
+            "slot_retire_rate": np.asarray(s["retired"]),
+            "decode_ms_mean": float(np.asarray(s["decode_ms"])[0]),
+            "decode_ms_max": float(np.asarray(s["decode_ms_max"])[0]),
+        }

@@ -1,9 +1,13 @@
-"""Windowed training telemetry via DABA Lite — the paper inside the train loop.
+"""Windowed training telemetry — the unified telemetry layer in the train loop.
 
 Loss and gradient-norm statistics over a sliding window of recent steps are
-maintained *inside* the jitted train step with worst-case O(1) monoid
-combines per step (Theorem 13): metric upkeep adds constant, uniform work —
-no amortized spikes perturbing step time.  Monoids used:
+maintained *inside* the jitted train step through the pure functional core of
+:class:`repro.core.telemetry.WindowedTelemetry`: the three metrics (variance,
+maxcount, max) live in ONE product-monoid state updated by the chunked
+engine, so metric upkeep is one fused window update per step — uniform,
+data-independent work (vectorized O(window) combines at O(log window)
+depth; no data-dependent amortized spikes perturbing step time).  Monoids
+used:
 
   * variance (Welford merge)       → windowed loss mean / stddev
   * maxcount                       → windowed grad-norm max + multiplicity
@@ -16,54 +20,53 @@ checkpoint + re-dispatch, which the fault-tolerance layer handles).
 
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import daba_lite
 from repro.core.monoids import max_monoid, maxcount_monoid, variance_monoid
+from repro.core.telemetry import WindowedTelemetry
 
 PyTree = Any
 
 _LOSS_M = variance_monoid()
 _GNORM_M = maxcount_monoid()
 _TIME_M = max_monoid()
+_TIME_IDENT = float(jnp.finfo(jnp.float32).min)  # identity of the max monoid
 
 
-def init_metric_windows(window: int) -> PyTree:
-    cap = window + 1
-    return {
-        "window": jnp.asarray(window, jnp.int32),
-        "loss": daba_lite.init(_LOSS_M, cap),
-        "gnorm": daba_lite.init(_GNORM_M, cap),
-        "step_time": daba_lite.init(_TIME_M, cap),
-    }
-
-
-def _slide(monoid, state, value, window):
-    state = daba_lite.insert(monoid, state, value)
-    return jax.lax.cond(
-        daba_lite.size(state) > window,
-        lambda s: daba_lite.evict(monoid, s),
-        lambda s: s,
-        state,
+@functools.lru_cache(maxsize=None)
+def _telemetry(window: int) -> WindowedTelemetry:
+    return WindowedTelemetry(
+        {"loss": _LOSS_M, "gnorm": _GNORM_M, "step_time": _TIME_M}, window
     )
 
 
+def _window_of(mw: PyTree) -> int:
+    # The window is static metadata recovered from the carry leaf SHAPES
+    # (tail length = window - 1) — values may be tracers inside jit, shapes
+    # never are.
+    return jax.tree.leaves(mw["carry"])[0].shape[0] + 1
+
+
+def init_metric_windows(window: int) -> PyTree:
+    return _telemetry(int(window)).init_state()
+
+
 def update_metric_windows(mw: PyTree, loss, grad_norm, step_time=None) -> PyTree:
-    w = mw["window"]
-    out = dict(mw)
-    out["loss"] = _slide(_LOSS_M, mw["loss"], loss, w)
-    out["gnorm"] = _slide(_GNORM_M, mw["gnorm"], grad_norm, w)
-    if step_time is not None:
-        out["step_time"] = _slide(_TIME_M, mw["step_time"], step_time, w)
-    return out
+    t = _telemetry(_window_of(mw))
+    if step_time is None:
+        step_time = _TIME_IDENT  # identity: leaves the windowed max untouched
+    return t.update(
+        mw, {"loss": loss, "gnorm": grad_norm, "step_time": step_time}
+    )
 
 
 def read_metric_windows(mw: PyTree) -> dict:
-    lq = daba_lite.query(_LOSS_M, mw["loss"])
-    gq = daba_lite.query(_GNORM_M, mw["gnorm"])
+    last = jax.tree.map(lambda a: a[0], mw["last"])  # single-lane telemetry
+    lq, gq = last["loss"], last["gnorm"]
     n = jnp.maximum(lq["n"], 1.0)
     return {
         "win/loss_mean": lq["mu"],
@@ -71,25 +74,22 @@ def read_metric_windows(mw: PyTree) -> dict:
         "win/gnorm_max": gq["m"],
         "win/gnorm_max_count": gq["c"],
         "win/steps": lq["n"].astype(jnp.int32),
-        "win/time_max": daba_lite.query(_TIME_M, mw["step_time"]),
+        "win/time_max": last["step_time"],
     }
 
 
 class TimeWindow:
     """Host-side (eager) sliding window over step durations for straggler
-    detection — worst-case O(1) upkeep per step via DABA Lite + variance
-    monoid, so the watchdog itself never causes a latency spike."""
+    detection — one jitted dispatch per observation via the telemetry layer
+    (variance monoid), so the watchdog itself never causes a latency spike."""
 
     def __init__(self, window: int = 64):
         self.window = window
-        self.m = variance_monoid()
-        self.state = daba_lite.init(self.m, window + 1)
+        self.telem = WindowedTelemetry({"t": variance_monoid()}, window)
 
     def observe(self, seconds: float) -> dict:
-        self.state = daba_lite.insert(self.m, self.state, seconds)
-        if int(daba_lite.size(self.state)) > self.window:
-            self.state = daba_lite.evict(self.m, self.state)
-        q = daba_lite.query(self.m, self.state)
+        self.telem.observe({"t": jnp.float32(seconds)})
+        q = jax.device_get(self.telem.aggregate("t"))  # one transfer
         n = max(float(q["n"]), 1.0)
         mean = float(q["mu"])
         std = (float(q["m2"]) / n) ** 0.5

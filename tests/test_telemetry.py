@@ -1,0 +1,154 @@
+"""Unified windowed-telemetry layer: one product-monoid state, one dispatch.
+
+Covers WindowedTelemetry (observe / observe_bulk / snapshot / functional
+core), product_monoid, the rewritten WindowedStreamStats fused dispatch, and
+the serve engine's windowed telemetry surface.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import monoids
+from repro.core.telemetry import WindowedTelemetry
+
+rng = np.random.default_rng(3)
+
+
+def _metrics():
+    return {
+        "mean": monoids.mean_monoid(),
+        "mn": monoids.min_monoid(),
+        "mx": monoids.max_monoid(),
+        "var": monoids.variance_monoid(),
+    }
+
+
+def _np_window_ref(vals, t, window):
+    w = np.asarray(vals[max(0, t - window + 1): t + 1])
+    return {"mean": w.mean(), "mn": w.min(), "mx": w.max(), "var": w.var()}
+
+
+def test_product_monoid_laws():
+    m = monoids.product_monoid(_metrics())
+    xs = rng.standard_normal(5)
+    lifted = [m.lift({"mean": x, "mn": x, "mx": x, "var": x}) for x in map(float, xs)]
+    # identity is a two-sided unit
+    for v in lifted:
+        for combined in (m.combine(m.identity(), v), m.combine(v, m.identity())):
+            for a, b in zip(jax.tree.leaves(combined), jax.tree.leaves(v)):
+                assert np.allclose(np.asarray(a), np.asarray(b))
+    # associativity (up to float reassociation)
+    a, b, c = lifted[:3]
+    left = m.combine(m.combine(a, b), c)
+    right = m.combine(a, m.combine(b, c))
+    for x, y in zip(jax.tree.leaves(left), jax.tree.leaves(right)):
+        assert np.allclose(np.asarray(x), np.asarray(y), atol=1e-5)
+
+
+def test_observe_matches_numpy_window():
+    window = 6
+    telem = WindowedTelemetry(_metrics(), window)
+    vals = rng.standard_normal(20).astype(np.float32)
+    for t, v in enumerate(vals):
+        telem.observe({k: jnp.float32(v) for k in _metrics()})
+        s = telem.snapshot()
+        ref = _np_window_ref(vals, t, window)
+        for k in ("mean", "mn", "mx", "var"):
+            assert abs(float(s[k]) - ref[k]) < 1e-4, (t, k, s[k], ref[k])
+
+
+def test_observe_bulk_matches_sequential_observe():
+    window = 7
+    t1 = WindowedTelemetry(_metrics(), window)
+    t2 = WindowedTelemetry(_metrics(), window)
+    vals = rng.standard_normal(23).astype(np.float32)
+    for v in vals:
+        t1.observe({k: jnp.float32(v) for k in _metrics()})
+    outs = {}
+    for lo in (0, 10):  # two ragged bulk chunks (10 then 13)
+        chunk = vals[lo: lo + 10] if lo == 0 else vals[10:]
+        outs = t2.observe_bulk({k: jnp.asarray(chunk) for k in _metrics()})
+    s1, s2 = t1.snapshot(), t2.snapshot()
+    for k in _metrics():
+        assert abs(float(s1[k]) - float(s2[k])) < 1e-4, k
+    # bulk also returns the per-step windowed outputs
+    ref = _np_window_ref(vals, len(vals) - 2, window)
+    assert abs(float(np.asarray(outs["mean"])[-2, 0]) - ref["mean"]) < 1e-4
+
+
+def test_batched_lanes_are_independent():
+    telem = WindowedTelemetry({"mx": monoids.max_monoid()}, window=4, batch=3)
+    data = rng.standard_normal((10, 3)).astype(np.float32)
+    for row in data:
+        telem.observe({"mx": jnp.asarray(row)})
+    s = telem.snapshot()
+    assert np.allclose(np.asarray(s["mx"]), data[-4:].max(axis=0), atol=1e-6)
+
+
+def test_functional_core_composes_into_jit():
+    telem = WindowedTelemetry({"mx": monoids.max_monoid()}, window=4)
+    state = telem.init_state()
+
+    @jax.jit
+    def roll(state, xs):
+        def step(st, x):
+            st = telem.update(st, {"mx": x})
+            return st, telem.read(st)["mx"]
+
+        return jax.lax.scan(step, state, xs)
+
+    xs = jnp.asarray(rng.standard_normal(12), jnp.float32)
+    _, out = roll(state, xs)
+    ref = np.array([np.asarray(xs)[max(0, t - 3): t + 1].max() for t in range(12)])
+    assert np.allclose(np.asarray(out)[:, 0], ref, atol=1e-6)
+
+
+def test_observe_is_single_dispatch():
+    telem = WindowedTelemetry(_metrics(), window=8)
+    calls = []
+    orig = telem._observe_jit
+    telem._observe_jit = lambda *a: (calls.append(1), orig(*a))[1]
+    telem.observe({k: 1.0 for k in _metrics()})
+    telem.observe({k: 2.0 for k in _metrics()})
+    assert calls == [1, 1]  # one jitted call per observation, nothing else
+
+
+def test_windowed_stream_stats_reference():
+    from repro.data.stream import WindowedStreamStats
+
+    stats = WindowedStreamStats(window=3)
+    toks = rng.integers(0, 50, (5, 2, 8)).astype(np.int32)
+    for step in range(5):
+        snap = stats.observe_batch(jnp.asarray(toks[step]), doc_id=step)
+    tf = toks.astype(np.float32)
+    means = tf.reshape(5, -1).mean(axis=1)
+    assert abs(snap["win_tok_mean"] - means[-3:].mean()) < 1e-4
+    assert snap["win_tok_min"] == tf[-3:].min()
+    assert snap["win_tok_max"] == tf[-3:].max()
+    assert stats.seen_recently(4) and stats.seen_recently(2)
+
+
+def test_serve_engine_telemetry_surface():
+    from repro.configs import ARCHS
+    from repro.models.factory import reduced_config
+    from repro.serve.engine import DecodeEngine, Request
+
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    model_rng = np.random.default_rng(0)
+    from repro.models.transformer import build_model
+
+    params = build_model(cfg).init_params(jax.random.key(0))
+    eng = DecodeEngine(cfg, params, batch_slots=2, cache_len=32,
+                       telemetry_window=16)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=model_rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32), max_new=3))
+    eng.run_until_drained(max_steps=40)
+    t = eng.telemetry()
+    assert t["slot_occupancy"].shape == (2,)
+    assert np.all((t["slot_occupancy"] >= 0) & (t["slot_occupancy"] <= 1))
+    assert t["slot_retire_rate"].shape == (2,)
+    assert float(t["slot_retire_rate"].sum()) > 0  # requests retired
+    assert t["decode_ms_max"] >= t["decode_ms_mean"] > 0

@@ -126,7 +126,8 @@ def main() -> None:
     if on("chunked"):
         print("# §8.2 — chunked bulk engine vs per-element stream")
         if args.quick:
-            rows = bench_chunked.main(window=2**8, T=20_000, B=4, pe_T=5_000)
+            rows = bench_chunked.main(window=2**8, T=20_000, B=4, pe_T=5_000,
+                                      ooo_T=8_000, ooo_horizon=64, ooo_pe_T=600)
         else:
             rows = bench_chunked.main()
         done("chunked", rows)

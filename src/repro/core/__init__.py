@@ -35,12 +35,18 @@ telemetry        WindowedTelemetry: N named windowed metrics as ONE jitted
                  windowed-stats layer (data/train/serve all sit on it)
 windowed_state   sliding-window SSM/linear-attention state via DABA Lite;
                  ChunkedWindowedStateCell.prefill consumes whole chunks
+event_time       event-time windows: TimestampedWindow (per-element horizon
+                 windows with watermark-driven bulk evictions over any SWAG
+                 algorithm) and EventTimeChunkedStream (bulk out-of-order
+                 engine: (ts, x) chunks, bounded reorder buffer, late-data
+                 policies, exact non-commutative merge order)
 """
 
 from repro.core import (
     chunked,
     daba,
     daba_lite,
+    event_time,
     flatfit,
     monoids,
     recalc,
@@ -50,6 +56,7 @@ from repro.core import (
     two_stacks,
     two_stacks_lite,
 )
+from repro.core.event_time import EventTimeChunkedStream, TimestampedWindow
 from repro.core.monoids import (
     Monoid,
     counting,
@@ -91,6 +98,8 @@ __all__ = [
     "Monoid",
     "SWAG",
     "WindowedTelemetry",
+    "EventTimeChunkedStream",
+    "TimestampedWindow",
     "counting",
     "get_monoid",
     "available_monoids",

@@ -158,6 +158,20 @@ class ChunkedStream:
         self._jitted_pc = jax.jit(self._process_chunk_impl)
         self._full_masks: dict = {}
 
+    # -- timestamped (event-time) mode -------------------------------------
+
+    @staticmethod
+    def timestamped(monoid: Monoid, horizon, **kwargs):
+        """Event-time counterpart of this engine: ``(ts, x)`` chunks, a time
+        ``horizon`` instead of a count window, per-chunk watermark advance,
+        and a bounded out-of-order reorder buffer (late-data policies:
+        drop / side_output / merge).  Returns a
+        :class:`repro.core.event_time.EventTimeChunkedStream`; see that
+        module for the watermark and merge-order semantics."""
+        from repro.core.event_time import EventTimeChunkedStream
+
+        return EventTimeChunkedStream(monoid, horizon, **kwargs)
+
     # -- carry ------------------------------------------------------------
 
     def init_carry(

@@ -1,0 +1,720 @@
+"""Event-time windowing: timestamped streams, watermarks, bulk out-of-order
+aggregation (cf. the authors' follow-ups arXiv 1810.11308 "Sub-O(log n)
+Out-of-Order Sliding-Window Aggregation" and arXiv 2307.11210 "Out-of-Order
+SWAG with Efficient Bulk Evictions and Insertions").
+
+The count-based engines (:mod:`repro.core.chunked`, the per-element SWAG
+algorithms) define a window as "the last N elements".  Production streams are
+*event-time*: every element carries a timestamp, the window is a time span
+(``horizon``), elements arrive slightly out of order, and eviction is driven
+by a **watermark** — a lower bound on all future event times.  This module
+threads those semantics through the bulk-op machinery of
+:mod:`repro.core.swag_base`:
+
+  * :class:`TimestampedWindow` — the per-element protocol: any SWAG algorithm
+    plus a parallel timestamp queue; ``advance(watermark)`` turns watermark
+    movement into ONE ``evict_bulk`` of every expired element.
+  * :class:`EventTimeChunkedStream` — the bulk engine: ``(ts, x)`` chunks,
+    per-chunk watermark advance, a bounded out-of-order reorder buffer that
+    stable-sorts/merges late arrivals into the aggregate, and per-released-
+    element window outputs computed with log-depth vectorized scans.
+  * :func:`in_order_reference` — the eager oracle the tests hold both
+    engines to.
+
+Watermark / late-data semantics
+-------------------------------
+
+The engine tracks ``max_ts``, the largest event time seen so far, and sets
+the watermark ``wm = max_ts - slack`` (monotone, per-chunk advance).  An
+element is **released** — merged into the window, its output emitted — once
+``ts <= wm``; until then it waits in the reorder buffer.  An element is
+**late** when it arrives with ``ts`` *below* the watermark that was already
+published before its chunk.  Late policy:
+
+  * ``"drop"``        — discard, count in ``n_dropped``;
+  * ``"side_output"`` — discard from the window, but report the rows so the
+    caller can reroute them (:class:`EventTimeResult.late_rows`);
+  * ``"merge"``       — merge into the window at the correct event-time
+    position as long as the element is still inside the horizon
+    (``ts > wm - horizon``; older is dropped).  Future outputs are exact;
+    outputs already emitted are not rewritten, and the merged element's OWN
+    output may miss in-window peers older than ``wm - horizon`` that were
+    already evicted.
+
+Whenever every element's lateness is within ``slack`` (``ts >= running max
+of previous chunks - slack``), nothing is ever late, and the concatenated
+released outputs equal the in-order per-element reference of the
+*timestamp-sorted* stream — bit-exactly for integer monoids (see
+tests/test_event_time.py).
+
+Non-commutative merge-order invariant
+-------------------------------------
+
+Everything is ordered by ``(event time, arrival order)``: the reorder buffer
+is kept time-sorted, chunks are stable-sorted on entry (buffer entries
+precede same-timestamp chunk entries; chunk entries keep arrival order on
+ties), and released elements stable-merge *after* same-timestamp window
+contents.  This is exactly the order a per-element scan of the stable-sorted
+stream would use — the FiBA papers' in-order merge discipline — so
+non-commutative monoids (argmax tie-breaks, m4 first/last, affine
+composition) stay exact: no combine ever sees its operands swapped.
+
+Per-released-element outputs cover a *variable-width* span (everything with
+``ts' > ts - horizon``), which a fixed-count sliding pass cannot produce.
+The engine builds a doubling (sparse) table over the merged
+window-plus-released array — ``table[k][i] = fold(arr[i .. i + 2^k))`` — and
+assembles each output as the left-to-right product of the binary
+decomposition of its span: O(log(window + chunk)) combines per element,
+fully vectorized, any monoid.  (A flat-array stand-in for the FiBA tree;
+invertible *commutative* monoids — sum, count, mean, … — skip the table and
+use one prefix scan plus ``inverse_front``, ~1 combine per element.)
+
+Timestamps are any real dtype; values strictly inside (``TS_MIN``,
+``TS_MAX``) of that dtype (the extremes are the engine's pad sentinels).
+Lanes: like :class:`~repro.core.chunked.ChunkedStream`, streams are
+``(T, B)``-leading with ONE shared timestamp per row.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import swag_base
+from repro.core.monoids import Monoid
+from repro.core.swag_base import chunk_length, tree_index
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Sentinels
+# ---------------------------------------------------------------------------
+
+
+def ts_limits(dtype) -> tuple:
+    """(TS_MIN, TS_MAX) pad sentinels for a timestamp dtype.  Real event
+    times must lie strictly between them."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.floating):
+        info = jnp.finfo(dtype)
+    else:
+        info = jnp.iinfo(dtype)
+    return info.min, info.max
+
+
+def _bc(mask, leaf):
+    """Broadcast a (L,) mask over a (L, ...) leaf."""
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def _mask_tree(tree: PyTree, mask, ident: PyTree) -> PyTree:
+    """Leaves where ``mask`` is False become the (broadcast) identity."""
+    return jax.tree.map(
+        lambda a, i: jnp.where(_bc(mask, a), a, jnp.asarray(i, a.dtype)),
+        tree,
+        ident,
+    )
+
+
+def _take0(tree: PyTree, idx) -> PyTree:
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def _where_rows(mask, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(_bc(mask, x), x, y), a, b)
+
+
+def fold_axis0(monoid: Monoid, tree_arr: PyTree) -> PyTree:
+    """Ordered log-depth fold of a (L, ...) stack: x_0 ⊗ x_1 ⊗ … ⊗ x_{L-1}.
+
+    Pairs adjacent rows (older operand left), padding an odd tail with the
+    identity — safe for non-commutative monoids (exactness test:
+    tests/test_event_time.py::test_fold_axis0_ordered).  Deliberately NOT
+    ``swag_base.chunk_fold``: that computes a full suffix scan (L log L
+    combines) to read one entry, while this is the telemetry read path —
+    ``window_fold`` runs per observation — and needs only L combines.
+    """
+    ident = monoid.identity()
+    n = chunk_length(tree_arr)
+    if n == 0:
+        return ident
+    while n > 1:
+        if n % 2:
+            tree_arr = jax.tree.map(
+                lambda a, i: jnp.concatenate(
+                    [a, jnp.broadcast_to(jnp.asarray(i, a.dtype), (1,) + a.shape[1:])],
+                    axis=0,
+                ),
+                tree_arr,
+                ident,
+            )
+            n += 1
+        tree_arr = monoid.combine(
+            jax.tree.map(lambda a: a[0::2], tree_arr),
+            jax.tree.map(lambda a: a[1::2], tree_arr),
+        )
+        n //= 2
+    return tree_index(tree_arr, 0)
+
+
+# ---------------------------------------------------------------------------
+# Variable-span range folds (the bulk event-time window primitive)
+# ---------------------------------------------------------------------------
+
+
+def range_fold(monoid: Monoid, arr: PyTree, starts, ends) -> PyTree:
+    """``out[q] = arr[starts[q]] ⊗ … ⊗ arr[ends[q]]`` for every query q.
+
+    Doubling table + binary span decomposition, left-to-right (exact for
+    non-commutative monoids; see module docstring).  ``arr`` is an (M, ...)
+    stack; ``starts``/``ends`` are (Q,) int32; an empty span
+    (``ends < starts``) yields the identity.  O(M log M) combines to build
+    the table, O(log M) per query, everything vectorized.
+    """
+    ident = monoid.identity()
+    M = chunk_length(arr)
+    levels = [arr]
+    span = 1
+    while span < M:
+        prev = levels[-1]
+        shifted = jax.tree.map(
+            lambda a, i: jnp.concatenate(
+                [
+                    a[span:],
+                    jnp.broadcast_to(
+                        jnp.asarray(i, a.dtype), (min(span, M),) + a.shape[1:]
+                    ),
+                ],
+                axis=0,
+            ),
+            prev,
+            ident,
+        )
+        levels.append(monoid.combine(prev, shifted))
+        span *= 2
+
+    starts = jnp.asarray(starts, jnp.int32)
+    ends = jnp.asarray(ends, jnp.int32)
+    length = jnp.maximum(ends - starts + 1, 0)
+    acc = jax.tree.map(
+        lambda a, i: jnp.broadcast_to(
+            jnp.asarray(i, a.dtype), starts.shape + a.shape[1:]
+        ),
+        arr,
+        ident,
+    )
+    pos = starts
+    for k in reversed(range(len(levels))):
+        take = ((length >> k) & 1).astype(bool)
+        vals = _take0(levels[k], jnp.clip(pos, 0, M - 1))
+        acc = _where_rows(~take, acc, monoid.combine(acc, vals))
+        pos = pos + jnp.where(take, jnp.int32(1 << k), jnp.int32(0))
+    return acc
+
+
+def range_fold_invertible(monoid: Monoid, arr: PyTree, starts, ends) -> PyTree:
+    """Range folds via one prefix scan + ``inverse_front`` — O(1) combines
+    per query.  Requires an invertible COMMUTATIVE monoid (the inverse
+    removes a whole prefix, which is only order-safe when ⊗ commutes)."""
+    ident = monoid.identity()
+    M = chunk_length(arr)
+    pref = jax.lax.associative_scan(monoid.combine, arr, axis=0)
+    starts = jnp.asarray(starts, jnp.int32)
+    ends = jnp.asarray(ends, jnp.int32)
+    at_end = _take0(pref, jnp.clip(ends, 0, M - 1))
+    before = _take0(pref, jnp.clip(starts - 1, 0, M - 1))
+    sliced = monoid.inverse_front(at_end, before)
+    full = _where_rows(starts > 0, sliced, at_end)
+    empty_or_pad = (ends < starts) | (ends < 0)
+    identity_rows = jax.tree.map(
+        lambda a, i: jnp.broadcast_to(jnp.asarray(i, a.dtype), a.shape), full, ident
+    )
+    return _where_rows(empty_or_pad, identity_rows, full)
+
+
+# ---------------------------------------------------------------------------
+# Per-element protocol
+# ---------------------------------------------------------------------------
+
+
+class TimestampedWindow:
+    """Event-time sliding window over any SWAG algorithm (per-element).
+
+    Wraps ``algo.init/insert/evict/query`` with a parallel timestamp queue:
+    the window holds every element with ``ts' > newest_watermark - horizon``.
+    ``insert`` requires event-time order (out-of-order ingestion is
+    :class:`EventTimeChunkedStream`'s job); :meth:`advance` turns a watermark
+    movement into ONE :func:`repro.core.swag_base.evict_bulk` call covering
+    every expired element — the paper's worst-case O(1) per-evict cost times
+    exactly the number of expirations, with a single dispatch.
+    """
+
+    def __init__(self, algo, monoid: Monoid, horizon, capacity: int):
+        self.algo = algo
+        self.monoid = monoid
+        self.horizon = horizon
+        self.capacity = capacity
+        self.state = algo.init(monoid, capacity)
+        self._ts: collections.deque = collections.deque()
+        self.watermark: Optional[float] = None
+
+    def insert(self, ts, value) -> None:
+        if self.watermark is not None and ts < self.watermark:
+            raise ValueError(
+                f"TimestampedWindow.insert needs event-time order (got {ts} "
+                f"below the watermark {self.watermark}); use "
+                f"EventTimeChunkedStream for out-of-order streams"
+            )
+        self.state = self.algo.insert(self.monoid, self.state, value)
+        self._ts.append(ts)
+        self.advance(ts)
+
+    def advance(self, watermark) -> int:
+        """Advance the watermark; bulk-evict expired elements.  Returns the
+        number evicted."""
+        if self.watermark is not None:
+            watermark = max(watermark, self.watermark)
+        self.watermark = watermark
+        k = 0
+        thr = watermark - self.horizon
+        while self._ts and self._ts[0] <= thr:
+            self._ts.popleft()
+            k += 1
+        if k:
+            self.state = swag_base.evict_bulk(self.algo, self.monoid, self.state, k)
+        return k
+
+    def query(self):
+        return self.algo.query(self.monoid, self.state)
+
+    def lowered_query(self):
+        return self.monoid.lower(self.query())
+
+    def size(self) -> int:
+        return len(self._ts)
+
+    def __len__(self) -> int:
+        return self.size()
+
+
+# ---------------------------------------------------------------------------
+# The bulk engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EventTimeResult:
+    """Compacted output of :meth:`EventTimeChunkedStream.stream` (host).
+
+    ``ts``/``ys``: released event times (event order) and the matching
+    (R, B, ...) window aggregates (pre-``lower``).  ``late_rows``: arrival
+    indices of every element that arrived below the watermark, under ANY
+    policy — check ``n_dropped`` to tell excluded rows from merged ones
+    (``"merge"`` flags late rows here but still folds the in-horizon ones
+    into the window).  ``state``: the final engine state.
+    """
+
+    ts: np.ndarray
+    ys: Any
+    late_rows: np.ndarray
+    n_late: int
+    n_dropped: int
+    state: Any
+
+
+class EventTimeChunkedStream:
+    """Chunk-at-a-time event-time sliding-window aggregation over (T, B).
+
+    Usage::
+
+        eng = EventTimeChunkedStream(monoid, horizon=60.0, slack=5.0)
+        state = eng.init_state(batch)
+        state, out = eng.process_chunk(state, ts_chunk, xs_chunk)
+        ...
+        res = eng.stream(ts, xs)      # whole stream + flush, compacted
+
+    Per chunk: watermark advance, stable time-sort of (reorder buffer ++
+    chunk), release of everything at or below the watermark, one stable
+    merge into the live window, per-released-element window outputs via
+    :func:`range_fold` (or the invertible-commutative prefix-scan fast
+    path), and a watermark-driven bulk eviction of expired window entries.
+    All shapes are static — full and (mask-padded) ragged chunks share one
+    compilation, mirroring :class:`repro.core.chunked.ChunkedStream`.
+
+    Capacities (static): ``capacity`` bounds the number of live in-horizon
+    elements (overflow loses the OLDEST window entries), ``buffer`` bounds
+    the reorder buffer (overflow loses the NEWEST pending arrivals — the
+    time-sorted prefix closest to release is kept).  Either overflow bumps
+    ``state["n_overflow"]`` (checked — with a raise — by :meth:`stream`;
+    other callers should poll the counter).
+    """
+
+    def __init__(
+        self,
+        monoid: Monoid,
+        horizon,
+        *,
+        slack=0,
+        chunk: int = 256,
+        capacity: int = 1024,
+        buffer: Optional[int] = None,
+        late_policy: str = "drop",
+        ts_dtype=jnp.float32,
+        use_inverse: Optional[bool] = None,
+    ):
+        if late_policy not in ("drop", "side_output", "merge"):
+            raise ValueError(f"unknown late_policy {late_policy!r}")
+        self.monoid = monoid
+        self.chunk = int(chunk)
+        self.capacity = int(capacity)
+        self.buffer = int(buffer) if buffer is not None else self.chunk
+        self.late_policy = late_policy
+        self.ts_dtype = jnp.dtype(ts_dtype)
+        tmin, tmax = ts_limits(self.ts_dtype)
+        self._tmin = jnp.asarray(tmin, self.ts_dtype)
+        self._tmax = jnp.asarray(tmax, self.ts_dtype)
+        self.horizon = jnp.asarray(horizon, self.ts_dtype)
+        self.slack = jnp.asarray(slack, self.ts_dtype)
+        if use_inverse is None:
+            use_inverse = monoid.invertible and monoid.commutative
+        self._use_inverse = use_inverse
+        self._jitted = {}  # (C, with_outputs) -> jitted impl
+        self._full_masks: dict = {}
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self, batch: int) -> PyTree:
+        ident = self.monoid.identity()
+        W, K = self.capacity, self.buffer
+
+        def fill(n):
+            return jax.tree.map(
+                lambda i: jnp.broadcast_to(
+                    jnp.asarray(i), (n, batch) + jnp.asarray(i).shape
+                ).copy(),
+                ident,
+            )
+
+        zero = jnp.zeros((), jnp.int32)
+        return {
+            "win_ts": jnp.full((W,), self._tmin, self.ts_dtype),
+            "win_agg": fill(W),
+            "buf_ts": jnp.full((K,), self._tmax, self.ts_dtype),
+            "buf_agg": fill(K),
+            "wm": self._tmin,
+            "max_ts": self._tmin,
+            "n_late": zero,
+            "n_dropped": zero,
+            "n_overflow": zero,
+        }
+
+    def window_fold(self, state: PyTree) -> PyTree:
+        """Aggregate of the live window (pads are identities): (B, ...)."""
+        return fold_axis0(self.monoid, state["win_agg"])
+
+    # -- one chunk ---------------------------------------------------------
+
+    def process_chunk(self, state, ts, xs, mask=None, *, final=False,
+                      with_outputs: bool = True):
+        """Consume a chunk: ``ts`` (C,), ``xs`` (C, B, ...) raw inputs.
+
+        ``mask`` (C,) pads a ragged final chunk (False rows are ignored
+        entirely).  ``final=True`` pushes the watermark to +∞, draining the
+        reorder buffer (end of stream).  ``with_outputs=False`` skips the
+        per-released-element outputs (window/buffer upkeep only — the
+        telemetry read path).  Returns ``(state, out)`` with ``out`` a dict:
+        ``ts``/``ys`` (P = buffer+C rows, ``mask`` selects the released
+        prefix, event order) and ``late`` (C,) late-arrival flags.
+        """
+        C = int(jnp.shape(jnp.asarray(ts))[0])
+        if mask is None:
+            mask = self._full_mask(C)
+        key = (C, bool(with_outputs))
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = self._jitted[key] = jax.jit(
+                lambda st, t, x, mk, fin: self._process_impl(
+                    st, t, x, mk, fin, with_outputs
+                )
+            )
+        return fn(state, ts, xs, mask, jnp.asarray(final, bool))
+
+    def chunk_fn(self, state, ts, xs, mask=None, *, final=False,
+                 with_outputs: bool = True):
+        """Unjitted :meth:`process_chunk` body — pure, for composing into a
+        caller's own ``jit`` (the telemetry layer's fused observe)."""
+        C = int(jnp.shape(jnp.asarray(ts))[0])
+        if mask is None:
+            mask = self._full_mask(C)
+        return self._process_impl(
+            state, ts, xs, mask, jnp.asarray(final, bool), with_outputs
+        )
+
+    def flush(self, state, example_xs):
+        """Drain the reorder buffer (watermark → +∞): every pending element
+        is released and the resulting window is fully evicted — terminal,
+        for end-of-stream.  ``example_xs`` is any one-row (1, B, ...) input
+        tree (values ignored — fully masked); it only fixes the traced
+        shapes."""
+        ts = jnp.zeros((1,), self.ts_dtype)
+        mask = jnp.zeros((1,), bool)
+        row = jax.tree.map(lambda a: a[:1], example_xs)
+        return self.process_chunk(state, ts, row, mask, final=True)
+
+    def _full_mask(self, C: int):
+        m = self._full_masks.get(C)
+        if m is None:
+            m = self._full_masks[C] = jnp.ones((C,), bool)
+        return m
+
+    # -- impl ---------------------------------------------------------------
+
+    def _process_impl(self, state, ts, xs, mask, final, with_outputs):
+        m = self.monoid
+        ident = m.identity()
+        W, K = self.capacity, self.buffer
+        tmin, tmax = self._tmin, self._tmax
+
+        ts = jnp.asarray(ts, self.ts_dtype)
+        C = ts.shape[0]
+        valid = jnp.asarray(mask, bool)
+        lifted = jax.vmap(jax.vmap(m.lift))(xs)  # (C, B, ...) Agg
+
+        # -- watermark advance (monotone; final drains everything) ---------
+        chunk_max = jnp.max(jnp.where(valid, ts, tmin))
+        max_ts = jnp.maximum(state["max_ts"], chunk_max)
+        wm_prev = state["wm"]
+        base_wm = jnp.where(max_ts > tmin, max_ts - self.slack, tmin)
+        wm = jnp.maximum(jnp.where(final, tmax, base_wm), wm_prev)
+        evict_thr = jnp.where(wm > tmin, wm - self.horizon, tmin)
+
+        # -- late-data policy ----------------------------------------------
+        late = valid & (wm_prev > tmin) & (ts < wm_prev)
+        if self.late_policy == "merge":
+            drop = late & (ts <= evict_thr)  # unrepresentable: past the window
+        else:
+            drop = late
+        n_late = state["n_late"] + late.sum(dtype=jnp.int32)
+        n_dropped = state["n_dropped"] + drop.sum(dtype=jnp.int32)
+        keep_in = valid & ~drop
+        ts_in = jnp.where(keep_in, ts, tmax)
+        chunk_agg = _mask_tree(lifted, keep_in, ident)
+
+        # -- reorder: stable time-sort of (buffer ++ chunk) -----------------
+        # buffer entries arrived earlier, so they precede same-ts chunk rows;
+        # chunk rows keep arrival order on ties (the merge-order invariant).
+        pend_ts = jnp.concatenate([state["buf_ts"], ts_in])
+        pend_agg = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            state["buf_agg"],
+            chunk_agg,
+        )
+        order = jnp.argsort(pend_ts, stable=True)
+        pend_ts = pend_ts[order]
+        pend_agg = _take0(pend_agg, order)
+        P = K + C
+        jj = jnp.arange(P, dtype=jnp.int32)
+        n_rel = ((pend_ts <= wm) & (pend_ts < tmax)).sum(dtype=jnp.int32)
+        rel = jj < n_rel
+        rel_ts = jnp.where(rel, pend_ts, tmax)
+        rel_agg = _mask_tree(pend_agg, rel, ident)
+
+        # -- new reorder buffer: the unreleased remainder -------------------
+        src = jnp.clip(jj + n_rel, 0, P - 1)
+        in_range = (jj + n_rel) < P
+        nb_ts = jnp.where(in_range, pend_ts[src], tmax)
+        nb_agg = _mask_tree(_take0(pend_agg, src), in_range, ident)
+        n_overflow = state["n_overflow"] + (nb_ts[K:] < tmax).sum(dtype=jnp.int32)
+        buf_ts_new = nb_ts[:K]
+        buf_agg_new = jax.tree.map(lambda a: a[:K], nb_agg)
+
+        # -- stable merge of released elements into the window --------------
+        comb_ts = jnp.concatenate([state["win_ts"], rel_ts])
+        comb_agg = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            state["win_agg"],
+            rel_agg,
+        )
+        order2 = jnp.argsort(comb_ts, stable=True)
+        inv2 = jnp.argsort(order2)  # inverse permutation
+        mts = comb_ts[order2]
+        magg = _take0(comb_agg, order2)
+
+        # -- per-released-element outputs: fold over (ts - horizon, ts] -----
+        if with_outputs:
+            ends = inv2[W + jj].astype(jnp.int32)
+            starts = jnp.searchsorted(
+                mts, rel_ts - self.horizon, side="right"
+            ).astype(jnp.int32)
+            fold = range_fold_invertible if self._use_inverse else range_fold
+            ys = fold(m, magg, starts, ends)
+        else:
+            ys = None
+
+        # -- watermark-driven bulk eviction + window re-pack ----------------
+        keep = (mts > evict_thr) & (mts < tmax) & (mts > tmin)
+        key = jnp.where(keep, mts, tmin)
+        kagg = _mask_tree(magg, keep, ident)
+        order3 = jnp.argsort(key, stable=True)
+        skey = key[order3]
+        sagg = _take0(kagg, order3)
+        Mtot = W + P
+        win_ts_new = skey[Mtot - W:]
+        win_agg_new = jax.tree.map(lambda a: a[Mtot - W:], sagg)
+        n_overflow = n_overflow + jnp.maximum(
+            keep.sum(dtype=jnp.int32) - W, 0
+        )
+
+        state = {
+            "win_ts": win_ts_new,
+            "win_agg": win_agg_new,
+            "buf_ts": buf_ts_new,
+            "buf_agg": buf_agg_new,
+            "wm": wm,
+            "max_ts": max_ts,
+            "n_late": n_late,
+            "n_dropped": n_dropped,
+            "n_overflow": n_overflow,
+        }
+        out = {"ts": rel_ts, "ys": ys, "mask": rel, "late": late}
+        return state, out
+
+    # -- whole stream ------------------------------------------------------
+
+    def stream(self, ts, xs, *, state: Optional[PyTree] = None,
+               flush: bool = True) -> EventTimeResult:
+        """Aggregate a whole timestamped (T, B) stream chunk-by-chunk.
+
+        Outputs are compacted with ONE host transfer at the end.  With
+        ``flush=True`` (default) the reorder buffer is drained, so every
+        non-dropped element is released and — when disorder ≤ slack — the
+        outputs equal the in-order reference of the sorted stream.  Raises
+        ``RuntimeError`` if a capacity overflowed (results would be wrong).
+        """
+        ts = jnp.asarray(ts, self.ts_dtype)
+        T = int(ts.shape[0])
+        batch = jax.tree.leaves(xs)[0].shape[1]
+        if state is None:
+            state = self.init_state(batch)
+        if T == 0:
+            if flush and bool(
+                (np.asarray(state["buf_ts"]) < np.asarray(self._tmax)).any()
+            ):
+                raise ValueError(
+                    "stream() got an empty chunk but the carried-in state has "
+                    "pending reorder-buffer elements; an empty chunk cannot "
+                    "fix the input shapes for the drain — call "
+                    "eng.flush(state, example_row) directly"
+                )
+            return EventTimeResult(
+                ts=np.zeros((0,), self.ts_dtype),
+                ys=None,
+                late_rows=np.zeros((0,), np.int64),
+                n_late=int(state["n_late"]),
+                n_dropped=int(state["n_dropped"]),
+                state=state,
+            )
+        outs = []
+        late_masks = []
+        for lo in range(0, T, self.chunk):
+            hi = min(lo + self.chunk, T)
+            pts = ts[lo:hi]
+            pxs = jax.tree.map(lambda a: a[lo:hi], xs)
+            if hi - lo < self.chunk:  # ragged final chunk: pad + mask
+                pad = self.chunk - (hi - lo)
+                pts = jnp.concatenate(
+                    [pts, jnp.broadcast_to(pts[-1:], (pad,))], axis=0
+                )
+                pxs = jax.tree.map(
+                    lambda a: jnp.concatenate(
+                        [a, jnp.broadcast_to(a[-1:], (pad,) + a.shape[1:])], 0
+                    ),
+                    pxs,
+                )
+                mask = jnp.arange(self.chunk) < (hi - lo)
+            else:
+                mask = None
+            state, out = self.process_chunk(state, pts, pxs, mask)
+            outs.append(out)
+            late_masks.append(out["late"][: hi - lo])
+        if flush and T > 0:
+            state, out = self.flush(state, jax.tree.map(lambda a: a[:1], xs))
+            outs.append(out)
+            late_masks.append(out["late"][:0])
+
+        # one host transfer for everything
+        host = jax.device_get(
+            {
+                "ts": jnp.concatenate([o["ts"] for o in outs]),
+                "mask": jnp.concatenate([o["mask"] for o in outs]),
+                "late": jnp.concatenate(late_masks) if late_masks
+                else jnp.zeros((0,), bool),
+                "ys": jax.tree.map(
+                    lambda *parts: jnp.concatenate(parts, axis=0),
+                    *[o["ys"] for o in outs],
+                ) if outs and outs[0]["ys"] is not None else None,
+                "counters": {
+                    k: state[k] for k in ("n_late", "n_dropped", "n_overflow")
+                },
+            }
+        )
+        if int(host["counters"]["n_overflow"]) > 0:
+            raise RuntimeError(
+                f"event-time engine overflow "
+                f"({int(host['counters']['n_overflow'])} elements lost): "
+                f"raise capacity= (live in-horizon elements) or buffer= "
+                f"(reorder slots) for this stream"
+            )
+        sel = host["mask"]
+        return EventTimeResult(
+            ts=host["ts"][sel],
+            ys=jax.tree.map(lambda a: a[sel], host["ys"])
+            if host["ys"] is not None else None,
+            late_rows=np.nonzero(host["late"])[0],
+            n_late=int(host["counters"]["n_late"]),
+            n_dropped=int(host["counters"]["n_dropped"]),
+            state=state,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Oracle
+# ---------------------------------------------------------------------------
+
+
+def in_order_reference(monoid: Monoid, ts, xs, horizon):
+    """Eager per-element oracle: stable-sort by timestamp, then for each
+    element fold (left-to-right) everything with ``ts' > ts - horizon``.
+
+    Returns ``(sorted_ts, (T, B, ...) aggregates)`` — what a per-element
+    :class:`TimestampedWindow` scan of the in-order stream emits, and what
+    :meth:`EventTimeChunkedStream.stream` must reproduce whenever disorder
+    ≤ slack.  O(T · window) combines — a test oracle, not an engine.
+    """
+    ts = np.asarray(ts)
+    order = np.argsort(ts, kind="stable")
+    lifted = jax.vmap(jax.vmap(monoid.lift))(xs)
+    ident = monoid.identity()
+    batch = jax.tree.leaves(lifted)[0].shape[1]
+    ident_b = jax.tree.map(
+        lambda i: jnp.broadcast_to(jnp.asarray(i), (batch,) + jnp.asarray(i).shape),
+        ident,
+    )
+    win: list = []
+    outs = []
+    for i in order:
+        win.append(i)
+        while win and ts[win[0]] <= ts[i] - horizon:
+            win.pop(0)
+        acc = ident_b
+        for j in win:
+            acc = monoid.combine(acc, tree_index(lifted, int(j)))
+        outs.append(acc)
+    stacked = jax.tree.map(lambda *rows: jnp.stack(rows, axis=0), *outs)
+    return ts[order], stacked

@@ -25,10 +25,12 @@ Notes on this implementation:
 from __future__ import annotations
 
 import dataclasses
+import sys
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import swag_base
 from repro.core.monoids import Monoid
 from repro.core.swag_base import alloc_ring, i32
 
@@ -118,3 +120,73 @@ def query_mut(monoid: Monoid, state: FlatFitState):
         state.aggs[j] = suffix
         state.nxt[j] = state.tail
     return suffix, state
+
+
+# ---------------------------------------------------------------------------
+# Bulk-op + warm-carry protocol wiring (eager module: host loops, but the
+# same *semantics* as the repro.core.swag_base dispatchers, so FlatFIT states
+# interoperate with the chunked engine's carries like every other algorithm)
+# ---------------------------------------------------------------------------
+
+
+def _copy_state(state: FlatFitState) -> FlatFitState:
+    """Shallow structural copy — FlatFIT ops mutate ``aggs``/``nxt`` in
+    place, so protocol conversions work on a copy to keep the caller's
+    state intact (the per-slot aggregates themselves are immutable pytrees)."""
+    return FlatFitState(
+        aggs=list(state.aggs),
+        nxt=list(state.nxt),
+        head=state.head,
+        tail=state.tail,
+        size=state.size,
+        capacity=state.capacity,
+    )
+
+
+def insert_bulk(monoid: Monoid, state: FlatFitState, values) -> FlatFitState:
+    """k sequential inserts (semantics of the generic bulk fallback)."""
+    k = swag_base.chunk_length(values)
+    for i in range(k):
+        state = insert(monoid, state, swag_base.tree_index(values, i))
+    return state
+
+
+def evict_bulk(monoid: Monoid, state: FlatFitState, k) -> FlatFitState:
+    """Evict the k oldest elements (no-op past empty, like ``evict``)."""
+    for _ in range(int(k)):
+        state = evict(monoid, state)
+    return state
+
+
+def state_to_carry(monoid: Monoid, state: FlatFitState, window: int) -> PyTree:
+    """Chunked-stream carry (suffix folds of the last ``window - 1``
+    elements) via the generic evict+query sweep — run on a COPY, since
+    FlatFIT evictions mutate.  Queries traverse without compressing, so the
+    sweep is exact on compressed and uncompressed layouts alike."""
+    return swag_base.generic_state_to_carry(
+        sys.modules[__name__], monoid, _copy_state(state), window
+    )
+
+
+def carry_to_state(monoid: Monoid, carry: PyTree, capacity: int) -> FlatFitState:
+    """EXACT specialization, any monoid: a fully path-compressed FlatFIT
+    buffer IS the carry layout.
+
+    After a compressing query, slot i holds the suffix aggregate
+    ``fold(i .. tail)`` and its index points at the tail — which is
+    precisely ``carry[t] = v_t ⊗ … ⊗ v_{h-1}``.  So the carry is laid out
+    directly: slot t ← carry[t], nxt[t] ← h.  Queries, evictions, and
+    subsequent inserts behave exactly as if the h underlying elements had
+    been inserted individually (no invertibility or commutativity needed,
+    unlike the pseudo-element fallback)."""
+    h = swag_base.chunk_length(carry)
+    if h > capacity - 1:
+        raise ValueError(
+            f"carry of length {h} needs FlatFIT capacity > {h} (got {capacity})"
+        )
+    state = init(monoid, capacity)
+    for t in range(h):
+        state.aggs[t] = swag_base.tree_index(carry, t)
+        state.nxt[t] = h
+    state.head, state.tail, state.size = 0, h % capacity, h
+    return state

@@ -449,6 +449,133 @@ def countmin_estimate(sketch: jax.Array, e) -> jax.Array:
     return jnp.min(jnp.stack(vals, -1), -1)
 
 
+def kll_monoid(
+    k: int = 64,
+    levels: int = 8,
+    quantiles: tuple = (0.5, 0.95, 0.99),
+    dtype=jnp.float32,
+) -> Monoid:
+    """Mergeable quantile sketch (KLL-style), fixed-size JAX arrays.
+
+    Agg = ``{"items": (levels, k) sorted values (+inf pads), "n": (levels,)
+    counts}``; an item at level l carries weight ``2**l``.  ``combine``
+    merge-sorts each level and, when a level exceeds k, deterministically
+    *compacts*: adjacent sorted pairs collapse to one survivor promoted to
+    the next level (the survivor parity alternates with the level count, so
+    compaction does not systematically bias a tail).  Everything is
+    fixed-shape ``sort``/``where`` — jit/vmap/scan-safe, usable as a
+    telemetry product-monoid member.
+
+    Like every sketch, the result is *order-insensitive in distribution but
+    not bitwise*: combine is commutative (a sort of the same multiset) and
+    associative up to sketch error — rank error ~ O(1/k) of the window
+    count, the usual KLL guarantee shape.  Capacity ~ ``k * 2**levels``
+    items; beyond that the oldest coarse summaries fall off the top level.
+
+    ``lower`` returns the ``quantiles`` estimates stacked on the last axis
+    (leading/batch axes broadcast); :func:`kll_quantiles` evaluates
+    arbitrary quantiles on a raw Agg.
+    """
+
+    kk = int(k)
+    L = int(levels)
+    qs = tuple(float(q) for q in quantiles)
+    inf = jnp.asarray(jnp.inf, dtype)  # pad sentinel: non-finite by design
+
+    def identity():
+        return {
+            "items": jnp.full((L, kk), inf, dtype),
+            "n": jnp.zeros((L,), jnp.int32),
+        }
+
+    def lift(e):
+        items = jnp.full((L, kk), inf, dtype).at[0, 0].set(jnp.asarray(e, dtype))
+        return {"items": items, "n": jnp.zeros((L,), jnp.int32).at[0].set(1)}
+
+    def combine(a, b):
+        # carry = items promoted from the level below (weight already 2**l)
+        carry = jnp.full(a["items"].shape[:-2] + (2 * kk,), inf, dtype)
+        carry_n = jnp.zeros(a["n"].shape[:-1], jnp.int32)
+        # survivor parity alternates with the global count (and level), so
+        # repeated compactions do not systematically keep the larger (or
+        # smaller) of each pair — the classic KLL de-biasing coin, made
+        # deterministic
+        tot = a["n"].sum(axis=-1) + b["n"].sum(axis=-1)
+        out_items, out_n = [], []
+        idx2k = jnp.arange(2 * kk)
+        idxk = jnp.arange(kk)
+        for l in range(L):
+            merged = jnp.sort(
+                jnp.concatenate(
+                    [a["items"][..., l, :], b["items"][..., l, :], carry], axis=-1
+                ),
+                axis=-1,
+            )  # (..., 4k) ascending, +inf pads last
+            n = a["n"][..., l] + b["n"][..., l] + carry_n
+            # overflow compacts the WHOLE level: every sorted adjacent pair
+            # collapses to one survivor promoted at double weight
+            pairs = jnp.where(n > kk, n // 2, 0)
+            off = (tot + l) & 1
+            psrc = jnp.clip(2 * idx2k + off[..., None], 0, 4 * kk - 1)
+            promoted = jnp.where(
+                idx2k < pairs[..., None],
+                jnp.take_along_axis(merged, psrc, axis=-1),
+                inf,
+            )
+            ksrc = jnp.clip(2 * pairs[..., None] + idxk, 0, 4 * kk - 1)
+            kept_n = n - 2 * pairs
+            kept = jnp.where(
+                idxk < kept_n[..., None],
+                jnp.take_along_axis(merged, ksrc, axis=-1),
+                inf,
+            )
+            out_items.append(kept)
+            out_n.append(kept_n)
+            carry, carry_n = promoted, pairs
+        # promotions past the top level fall off (capacity ~ k * 2**levels)
+        return {
+            "items": jnp.stack(out_items, axis=-2),
+            "n": jnp.stack(out_n, axis=-1),
+        }
+
+    def lower(v):
+        return kll_quantiles(v, qs)
+
+    return Monoid(
+        name=f"kll{kk}x{L}",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lower,
+        commutative=True,
+        invertible=False,
+    )
+
+
+def kll_quantiles(agg: PyTree, qs) -> jax.Array:
+    """Quantile estimates from a :func:`kll_monoid` Agg (batch axes
+    broadcast; returns ``(..., len(qs))``).  Empty sketches yield 0."""
+    items = agg["items"]  # (..., L, k)
+    L, k = items.shape[-2:]
+    flat = items.reshape(items.shape[:-2] + (L * k,))
+    level_w = jnp.broadcast_to(
+        jnp.repeat(2 ** jnp.arange(L, dtype=jnp.float32), k), flat.shape
+    )
+    weights = jnp.where(jnp.isfinite(flat), level_w, 0.0)
+    order = jnp.argsort(flat, axis=-1)
+    svals = jnp.take_along_axis(flat, order, axis=-1)
+    swts = jnp.take_along_axis(weights, order, axis=-1)
+    cum = jnp.cumsum(swts, axis=-1)
+    total = cum[..., -1:]
+    outs = []
+    for q in qs:
+        target = q * total
+        idx = jnp.argmax(cum >= target, axis=-1)[..., None]
+        val = jnp.take_along_axis(svals, idx, axis=-1)
+        outs.append(jnp.where(total > 0, val, 0.0)[..., 0])
+    return jnp.stack(outs, axis=-1)
+
+
 def hll_monoid(num_registers: int = 64) -> Monoid:
     """HyperLogLog-style register-max sketch; combine = elementwise max."""
 
@@ -623,6 +750,7 @@ _REGISTRY: dict[str, Callable[[], Monoid]] = {
     "bloom": bloom_monoid,
     "countmin": countmin_monoid,
     "hll": hll_monoid,
+    "kll": kll_monoid,
     "affine_i32": affine_int_monoid,
     "mat2x2": matrix_monoid,
 }

@@ -4,7 +4,7 @@ Every consumer of windowed statistics in the system (data-pipeline stream
 stats, trainer metric windows, the serve engine's per-slot stats) used to
 hand-roll its own per-element DABA Lite loop with one device round-trip per
 metric.  ``WindowedTelemetry`` replaces all of them with a single
-product-monoid state driven by the chunked streaming engine:
+product-monoid state driven by the chunked streaming engines:
 
   * **one state**: the N metrics live in one
     :func:`repro.core.monoids.product_monoid` element, so an observation is
@@ -13,31 +13,54 @@ product-monoid state driven by the chunked streaming engine:
     lower) as a single jitted call; :meth:`snapshot` is a single host
     transfer of every lowered metric — no per-metric ``float()`` syncs;
   * **chunked bulk**: :meth:`observe_bulk` feeds whole (C,) / (C, B) chunks
-    through ``ChunkedStream.chunk_fn`` (~3 combines per element, log depth)
-    and returns the per-step windowed outputs;
+    through the engine's pure ``chunk_fn`` (~3 combines per element, log
+    depth) and returns the per-step windowed outputs;
   * **pure functional core**: :meth:`init_state` / :meth:`update` /
     :meth:`read` are pure, so the same telemetry can live *inside* an outer
-    ``jit`` (the trainer embeds it in the fused train step).
+    ``jit`` (the trainer embeds it in the fused train step);
+  * **checkpointable**: :meth:`state_dict` / :meth:`load_state_dict` expose
+    the window state as a plain pytree for
+    :mod:`repro.train.checkpoint` — serve/train telemetry survives restarts.
+
+Window semantics — exactly one of:
+
+  * ``window=N`` — **count-based**: fold of the last N observations
+    (front-truncated during fill), driven by
+    :class:`repro.core.chunked.ChunkedStream`;
+  * ``horizon=H`` — **event-time**: fold of every observation whose
+    timestamp lies in ``(now - H, now]`` where ``now`` is the watermark of
+    the newest observation, driven by
+    :class:`repro.core.event_time.EventTimeChunkedStream`.  Each
+    observation carries a timestamp (``ts=`` on observe/update; defaults to
+    ``time.monotonic()`` on the stateful wrappers), shared across lanes.
+    Mildly out-of-order timestamps are stable-merged into the window (the
+    engine's ``"merge"`` late policy), so wall-clock jitter between
+    producers cannot corrupt non-commutative metrics.  Under stragglers a
+    count window silently stretches its wall-clock coverage; a horizon
+    window keeps measuring the same span of real time.
 
 Lanes: ``batch > 1`` maintains per-lane windows (e.g. one per serve slot);
 per-observation values may be scalars (broadcast to every lane) or
 ``(batch,)`` arrays.
 
 Cost model: a single :meth:`observe` does O(window) *vectorized* combines at
-O(log window) depth (the chunked engine's C=1 case) — uniform and
+O(log window) depth (the chunked engines' C=1 case) — uniform and
 data-independent, but not the per-element algorithms' O(1) combine count.
 The dispatch, not the combine count, dominates telemetry-rate updates; bulk
-ingest amortizes to ~3 combines per element.
+ingest amortizes to ~3 combines per element (count mode) / O(log) per
+element (event-time mode).
 """
 
 from __future__ import annotations
 
+import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.chunked import ChunkedStream
+from repro.core.event_time import EventTimeChunkedStream
 from repro.core.monoids import Monoid, product_monoid
 
 PyTree = Any
@@ -47,37 +70,61 @@ class WindowedTelemetry:
     """N named sliding-window metrics as one jitted product-monoid state.
 
     Args:
-      metrics: name → :class:`Monoid`; the window semantics (fold of the
-        last ``window`` observations, front-truncated during fill) apply to
-        every metric uniformly.
-      window: number of observations per window.
+      metrics: name → :class:`Monoid`; the window semantics apply to every
+        metric uniformly.
+      window: count-based window length (exclusive with ``horizon``).
+      horizon: event-time window span (exclusive with ``window``).
+      slack: event-time reorder slack (see
+        :class:`~repro.core.event_time.EventTimeChunkedStream`); 0 releases
+        every observation immediately.
+      capacity / buffer: event-time engine capacities (max live in-horizon
+        observations / reorder slots).
       batch: number of independent lanes (per-slot / per-key windows).
       prepare: optional traced function mapping raw observe() input to the
         per-metric value dict — reductions fused into the same dispatch.
-      chunk: chunk length hint for :meth:`ChunkedStream.stream`-style use;
-        :meth:`observe_bulk` adapts to whatever chunk length it is handed.
+      chunk: chunk length hint for bulk ingest.
     """
 
     def __init__(
         self,
         metrics: Dict[str, Monoid],
-        window: int,
+        window: Optional[int] = None,
         *,
+        horizon=None,
+        slack=0.0,
+        capacity: int = 256,
+        buffer: int = 8,
         batch: int = 1,
         prepare: Optional[Callable] = None,
         chunk: Optional[int] = None,
     ):
+        if (window is None) == (horizon is None):
+            raise ValueError("pass exactly one of window= (count) / horizon= (event-time)")
         self.metrics = dict(metrics)
-        self.window = int(window)
         self.batch = int(batch)
         self.prepare = prepare
         self.monoid = product_monoid(self.metrics)
-        # product Agg is a pytree -> always the generic associative-scan path
-        self._engine = ChunkedStream(
-            self.monoid, self.window, chunk, use_kernel=False
-        )
+        self.horizon = horizon
+        if horizon is None:
+            self.window = int(window)
+            # product Agg is a pytree -> always the generic associative-scan path
+            self._engine = ChunkedStream(
+                self.monoid, self.window, chunk, use_kernel=False
+            )
+        else:
+            self.window = None
+            self._engine = EventTimeChunkedStream(
+                self.monoid,
+                horizon,
+                slack=slack,
+                chunk=chunk or 64,
+                capacity=capacity,
+                buffer=buffer,
+                late_policy="merge",
+            )
         self._state = self.init_state()
         self._lowered = self.read(self._state)
+        self._t0: Optional[float] = None  # anchor for default wall-clock ts
         # no donate_argnums: CPU backends warn on unusable donations, and the
         # telemetry state is tiny relative to any model state
         self._observe_jit = jax.jit(self._observe_impl)
@@ -86,28 +133,67 @@ class WindowedTelemetry:
     # -- pure functional core (usable inside an outer jit) -----------------
 
     def init_state(self) -> PyTree:
-        """{"carry": engine tail, "last": per-lane window aggregate}."""
+        """{"carry"|"eng": engine state, "last": per-lane window aggregate}."""
         ident = self.monoid.identity()
         last = jax.tree.map(
             lambda i: jnp.broadcast_to(i, (self.batch,) + i.shape), ident
         )
-        return {"carry": self._engine.init_carry(self.batch), "last": last}
+        if self.horizon is None:
+            return {"carry": self._engine.init_carry(self.batch), "last": last}
+        return {"eng": self._engine.init_state(self.batch), "last": last}
 
-    def update(self, state: PyTree, values) -> PyTree:
+    def update(self, state: PyTree, values, ts=None) -> PyTree:
         """One observation (pure).  ``values``: per-metric dict (or raw input
-        when ``prepare`` is set); leaves must be scalars or (batch,)."""
+        when ``prepare`` is set); leaves must be scalars or (batch,).  In
+        event-time mode ``ts`` (a scalar timestamp) is required."""
         row = self._to_row(values)
-        carry, y = self._engine.chunk_fn(state["carry"], row)
-        return {"carry": carry, "last": jax.tree.map(lambda a: a[0], y)}
+        if self.horizon is None:
+            carry, y = self._engine.chunk_fn(state["carry"], row)
+            return {"carry": carry, "last": jax.tree.map(lambda a: a[0], y)}
+        if ts is None:
+            raise ValueError("event-time telemetry update needs ts=")
+        eng, _ = self._engine.chunk_fn(
+            state["eng"],
+            jnp.reshape(jnp.asarray(ts, self._engine.ts_dtype), (1,)),
+            row,
+            with_outputs=False,
+        )
+        return {"eng": eng, "last": self._engine.window_fold(eng)}
 
-    def update_bulk(self, state: PyTree, chunks):
+    def update_bulk(self, state: PyTree, chunks, ts=None):
         """A whole chunk of observations (pure).  ``chunks``: per-metric dict
-        of (C,) / (C, batch)-leading values.  Returns (state, (C, batch)
-        window aggregates per metric)."""
+        of (C,) / (C, batch)-leading values; event-time mode also needs
+        ``ts`` (C,).  Returns (state, per-metric window aggregates): (C,
+        batch) rows aligned with the inputs in count mode; in event-time
+        mode (buffer + C, batch) rows, one per *released* observation in
+        event order (the static length covers a draining reorder buffer
+        releasing more than C at once), identity-padded past the release
+        count — with in-order timestamps and ``slack=0`` the first C rows
+        align with the chunk."""
         vals = self._to_chunk(chunks)
-        carry, y = self._engine.chunk_fn(state["carry"], vals)
-        state = {"carry": carry, "last": jax.tree.map(lambda a: a[-1], y)}
-        return state, y
+        if self.horizon is None:
+            carry, y = self._engine.chunk_fn(state["carry"], vals)
+            state = {"carry": carry, "last": jax.tree.map(lambda a: a[-1], y)}
+            return state, y
+        if ts is None:
+            raise ValueError("event-time telemetry update_bulk needs ts=")
+        eng, out = self._engine.chunk_fn(
+            state["eng"], jnp.asarray(ts, self._engine.ts_dtype), vals
+        )
+        # keep every released row (a draining buffer can release more than
+        # C); rows beyond the release mask are identities, never pad folds
+        rel = out["mask"]
+        ident = self.monoid.identity()
+        y = jax.tree.map(
+            lambda a, i: jnp.where(
+                rel.reshape(rel.shape + (1,) * (a.ndim - 1)),
+                a,
+                jnp.asarray(i, a.dtype),
+            ),
+            out["ys"],
+            ident,
+        )
+        return {"eng": eng, "last": self._engine.window_fold(eng)}, y
 
     def read(self, state: PyTree) -> dict:
         """Lowered windowed value per metric (pure; (batch,)-leading)."""
@@ -115,17 +201,23 @@ class WindowedTelemetry:
 
     # -- stateful convenience wrappers -------------------------------------
 
-    def observe(self, values) -> dict:
+    def observe(self, values, ts=None) -> dict:
         """One windowed observation — exactly ONE jitted device dispatch
         (prepare + lift + window update + lower, fused).  Returns the
-        lowered metrics as device values (no host sync)."""
-        self._state, self._lowered = self._observe_jit(self._state, values)
+        lowered metrics as device values (no host sync).  ``ts`` (event-time
+        mode) defaults to ``time.monotonic()``."""
+        ts = self._default_ts(ts)
+        self._state, self._lowered = self._observe_jit(self._state, values, ts)
         return self._lowered
 
-    def observe_bulk(self, chunks) -> dict:
+    def observe_bulk(self, chunks, ts=None) -> dict:
         """Feed a whole (C,) / (C, batch) chunk per metric; returns the
         per-step lowered windowed outputs (device values)."""
-        self._state, self._lowered, outs = self._bulk_jit(self._state, chunks)
+        if self.horizon is not None and ts is None:
+            raise ValueError("event-time telemetry observe_bulk needs ts=")
+        if ts is None:
+            ts = 0.0
+        self._state, self._lowered, outs = self._bulk_jit(self._state, chunks, ts)
         return outs
 
     def snapshot(self) -> dict:
@@ -144,14 +236,86 @@ class WindowedTelemetry:
             agg = jax.tree.map(lambda a: a[0], agg)
         return agg
 
+    def overflow_count(self) -> int:
+        """Event-time mode: observations lost to the engine's static
+        capacities (``capacity``/``buffer``) so far.  Non-zero means the
+        effective window has degraded to the newest ``capacity`` in-horizon
+        observations — raise ``capacity=`` to restore the full horizon.
+        Always 0 in count mode (host sync)."""
+        if self.horizon is None:
+            return 0
+        return int(self._state["eng"]["n_overflow"])
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def state_dict(self) -> PyTree:
+        """The full window state as a plain pytree — feed to
+        :func:`repro.train.checkpoint.save` (and use as the ``like=``
+        template for :func:`~repro.train.checkpoint.restore`)."""
+        return {"state": self._state}
+
+    def load_state_dict(self, sd: PyTree) -> None:
+        """Adopt a restored :meth:`state_dict` pytree.  The tree structure
+        must match this instance's configuration (same metrics, window
+        mode, capacities, lanes).  In event-time mode the default-timestamp
+        clock is re-anchored to CONTINUE the restored stream: the next
+        default-``ts`` observation lands just after the restored watermark
+        (a fresh anchor starting at 0 would make every new observation
+        "late" against the old watermark and silently dropped)."""
+        restored = sd["state"]
+        if jax.tree.structure(restored) != jax.tree.structure(self._state):
+            raise ValueError(
+                "telemetry state_dict structure mismatch — configure the "
+                "instance (metrics/window/horizon/batch) like the saved one"
+            )
+        for new, old in zip(jax.tree.leaves(restored), jax.tree.leaves(self._state)):
+            if jnp.shape(new) != jnp.shape(old):
+                raise ValueError(
+                    f"telemetry state_dict shape mismatch ({jnp.shape(new)} vs "
+                    f"{jnp.shape(old)}) — the saved window/capacity/batch "
+                    f"differs from this instance's configuration"
+                )
+        self._state = jax.tree.map(
+            lambda new, old: jnp.asarray(new, jnp.asarray(old).dtype),
+            restored,
+            self._state,
+        )
+        self._lowered = self.read(self._state)
+        if self.horizon is not None:
+            self._t0 = time.monotonic() - self.last_timestamp()
+
+    def last_timestamp(self) -> float:
+        """Event-time mode: the largest observation timestamp seen (0.0
+        before any observation; host sync).  The epoch callers passing
+        explicit ``ts`` should continue from after a restore."""
+        if self.horizon is None:
+            return 0.0
+        tmin = float(jax.device_get(self._engine._tmin))
+        mx = float(self._state["eng"]["max_ts"])
+        return 0.0 if mx <= tmin else mx
+
     # -- impl ---------------------------------------------------------------
 
-    def _observe_impl(self, state, values):
-        state = self.update(state, values)
+    def _default_ts(self, ts):
+        if self.horizon is None:
+            return 0.0  # unused in count mode; fixed so jit sees one shape
+        if ts is not None:
+            return ts
+        # anchor default wall-clock stamps at the first observation: raw
+        # monotonic()/perf_counter() values (seconds since boot) lose
+        # float32 precision on long-uptime hosts.  Don't mix default and
+        # explicit ts on one instance.
+        now = time.monotonic()
+        if self._t0 is None:
+            self._t0 = now
+        return now - self._t0
+
+    def _observe_impl(self, state, values, ts):
+        state = self.update(state, values, ts)
         return state, self.read(state)
 
-    def _bulk_impl(self, state, chunks):
-        state, y = self.update_bulk(state, chunks)
+    def _bulk_impl(self, state, chunks, ts):
+        state, y = self.update_bulk(state, chunks, ts)
         outs = {k: m.lower(y[k]) for k, m in self.metrics.items()}
         return state, self.read(state), outs
 

@@ -4,6 +4,11 @@ Every batch is a pure function of (seed, step), so a restarted run replays
 exactly the batches it would have seen — the data-side half of
 checkpoint-restart fault tolerance (no shuffle-buffer state to persist).
 
+``DisorderedEventStream`` emits timestamped values in a configurably
+out-of-order arrival sequence with bounded lateness — the feed for the
+event-time windowing engine (:mod:`repro.core.event_time`) and its
+equivalence tests/benchmarks.
+
 ``WindowedStreamStats`` runs the paper's aggregators over the live stream:
 Bloom-filter windowed dedup (non-invertible OR monoid) and min/max/mean
 token statistics for normalization.  All four metrics live in ONE
@@ -67,6 +72,70 @@ class SyntheticStream:
         while True:
             yield self.batch_at(step)
             step += 1
+
+
+class DisorderedEventStream:
+    """Deterministic timestamped stream with configurable bounded disorder.
+
+    Event times are a Poisson-ish arrival process (exponential gaps of mean
+    ``mean_gap``); the *arrival* order perturbs the event order by delaying a
+    ``disorder`` fraction of elements by up to ``slack`` time units (sort by
+    ``ts + U(0, slack) * Bernoulli(disorder)``).  By construction every
+    element's lateness relative to the running max is ≤ ``slack``, so an
+    :class:`repro.core.event_time.EventTimeChunkedStream` with that slack
+    reproduces the in-order reference exactly — the generator for the
+    equivalence tests and the out-of-order benchmark rows.
+
+    Pure function of the seed: a restarted consumer replays the identical
+    arrival sequence (same fault-tolerance story as :class:`SyntheticStream`).
+    """
+
+    def __init__(
+        self,
+        n: int,
+        batch: int = 1,
+        *,
+        mean_gap: float = 1.0,
+        disorder: float = 0.1,
+        slack: float = 8.0,
+        integer_values: bool = False,
+        seed: int = 0,
+    ):
+        self.n = int(n)
+        self.batch = int(batch)
+        self.mean_gap = float(mean_gap)
+        self.disorder = float(disorder)
+        self.slack = float(slack)
+        self.integer_values = integer_values
+        self.seed = seed
+
+    def _event_order(self):
+        rng = np.random.default_rng(self.seed)
+        ts = np.cumsum(rng.exponential(self.mean_gap, self.n)).astype(np.float32)
+        if self.integer_values:
+            xs = rng.integers(-9, 9, (self.n, self.batch)).astype(np.int32)
+        else:
+            xs = rng.standard_normal((self.n, self.batch)).astype(np.float32)
+        delay = (rng.random(self.n) < self.disorder) * rng.uniform(
+            0.0, self.slack, self.n
+        )
+        return ts, xs, np.argsort(ts + delay, kind="stable")
+
+    def arrival(self):
+        """(ts, xs) in ARRIVAL order — (n,) timestamps, (n, batch) values."""
+        ts, xs, order = self._event_order()
+        return jnp.asarray(ts[order]), jnp.asarray(xs[order])
+
+    def in_order(self):
+        """(ts, xs) sorted by event time (the reference stream)."""
+        ts, xs, _ = self._event_order()
+        return jnp.asarray(ts), jnp.asarray(xs)
+
+    def max_lateness(self) -> float:
+        """Largest observed lateness vs the running max (≤ ``slack``)."""
+        ts, _, order = self._event_order()
+        arr = ts[order]
+        return float(np.max(np.maximum.accumulate(arr) - arr))
 
 
 class WindowedStreamStats:

@@ -87,11 +87,21 @@ _MONOID_NAME_TO_OP = {
 }
 
 
+
 def op_for_monoid(monoid) -> Optional[str]:
     """Kernel op equivalent to ``monoid``, or None if it needs the generic path.
 
     Matching is by the monoid's registered name prefix (``sum_float32`` →
-    ``sum``); only scalar-Agg monoids qualify.
+    ``sum``), gated on the Agg actually being a single scalar leaf — pytree
+    aggregates (sketches like KLL/Bloom, mean pairs, m4, affine maps,
+    product monoids) always take the generic path even if a caller aliases
+    one to a kernel-op name.
     """
     base = monoid.name.split("_")[0].split("#")[0]
-    return _MONOID_NAME_TO_OP.get(base)
+    op = _MONOID_NAME_TO_OP.get(base)
+    if op is None:
+        return None
+    leaves = jax.tree.leaves(monoid.identity())
+    if len(leaves) != 1 or jnp.ndim(leaves[0]) != 0:
+        return None
+    return op

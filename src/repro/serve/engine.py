@@ -11,9 +11,16 @@ The decode step is the latency-critical path: for the windowed-state archs
 combines — the paper's guarantee surfacing as serve-tail-latency uniformity.
 
 Windowed serve telemetry rides on the unified telemetry layer: per-slot
-occupancy / retire-rate and decode-step latency over the last
-``telemetry_window`` engine steps live in ONE product-monoid state (a single
-extra jitted dispatch per step), surfaced via :meth:`DecodeEngine.telemetry`.
+occupancy / retire-rate, decode-step latency, and a KLL tail-latency sketch
+(p50/p95/p99) live in ONE product-monoid state (a single extra jitted
+dispatch per step), surfaced via :meth:`DecodeEngine.telemetry`.  The window
+is **event-time** by default (``telemetry_horizon`` seconds of wall clock,
+each step observed at its completion timestamp): under stragglers a
+count-of-steps window silently stretches to cover more wall time exactly
+when latency is most interesting, whereas the horizon window keeps
+measuring the same span of real time.  Telemetry survives restarts via
+:meth:`DecodeEngine.save_telemetry` / :meth:`DecodeEngine.restore_telemetry`
+(the checkpoint layer of :mod:`repro.train.checkpoint`).
 """
 
 from __future__ import annotations
@@ -26,10 +33,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.monoids import max_monoid, mean_monoid
+from repro.core.monoids import kll_monoid, max_monoid, mean_monoid
 from repro.core.telemetry import WindowedTelemetry
 from repro.models.common import ModelConfig
 from repro.models.transformer import DecodeSpec, build_model
+from repro.train import checkpoint
 
 
 @dataclasses.dataclass
@@ -50,22 +58,43 @@ class DecodeEngine:
         batch_slots: int,
         cache_len: int,
         telemetry_window: int = 128,
+        telemetry_horizon: Optional[float] = 30.0,
     ):
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
         # per-slot windowed serve stats: one B-lane product-monoid state,
-        # one jitted dispatch per engine step
-        self._telem = WindowedTelemetry(
-            {
-                "active": mean_monoid(),       # per-slot occupancy fraction
-                "retired": mean_monoid(),      # per-slot retire rate / step
-                "decode_ms": mean_monoid(),    # decode-step latency (lock-step)
-                "decode_ms_max": max_monoid(),
-            },
-            telemetry_window,
-            batch=batch_slots,
-        )
+        # one jitted dispatch per engine step.  Default is an EVENT-TIME
+        # window (``telemetry_horizon`` seconds, each step observed at its
+        # completion time) so the stats stay correct under stragglers; pass
+        # ``telemetry_horizon=None`` for a count window of
+        # ``telemetry_window`` steps.  In event-time mode the engine holds
+        # at most max(telemetry_window, 512) in-horizon steps — past that
+        # the window covers the newest steps only and telemetry() reports
+        # the loss under "telemetry_overflow".
+        metrics = {
+            "active": mean_monoid(),       # per-slot occupancy fraction
+            "retired": mean_monoid(),      # per-slot retire rate / step
+            "decode_ms": mean_monoid(),    # decode-step latency (lock-step)
+            "decode_ms_max": max_monoid(),
+            # tail latency: mergeable KLL quantile sketch (p50/p95/p99);
+            # representable weight k*(2^levels - 1) = 1984 must cover the
+            # engine's max in-horizon step count (512 below) or the top
+            # level silently sheds the coarsest summaries
+            "decode_ms_q": kll_monoid(k=64, levels=5),
+        }
+        if telemetry_horizon is None:
+            self._telem = WindowedTelemetry(
+                metrics, telemetry_window, batch=batch_slots
+            )
+        else:
+            self._telem = WindowedTelemetry(
+                metrics,
+                horizon=float(telemetry_horizon),
+                capacity=max(int(telemetry_window), 512),
+                batch=batch_slots,
+            )
+        self._telem_t0 = time.perf_counter()  # float32-safe ts anchor
         self.model = build_model(cfg)
         self.spec = DecodeSpec(
             cache_len=cache_len,
@@ -144,13 +173,16 @@ class DecodeEngine:
                 retired_mask[i] = 1.0
         active_mask = np.zeros(self.B, np.float32)
         active_mask[active] = 1.0
+        # event time = wall-clock completion of this decode step
         self._telem.observe(
             {
                 "active": jnp.asarray(active_mask),
                 "retired": jnp.asarray(retired_mask),
                 "decode_ms": jnp.float32(decode_ms),
                 "decode_ms_max": jnp.float32(decode_ms),
-            }
+                "decode_ms_q": jnp.float32(decode_ms),
+            },
+            ts=time.perf_counter() - self._telem_t0,
         )
         return len(active)
 
@@ -167,14 +199,45 @@ class DecodeEngine:
     # -- windowed serve telemetry -----------------------------------------
 
     def telemetry(self) -> dict:
-        """Windowed serve statistics over the last ``telemetry_window``
-        engine steps (one host transfer): per-slot occupancy and retire
-        rate, decode-step latency mean/max (ms).  All slots decode in
-        lock-step, so the latency window is shared across lanes."""
-        s = self._telem.snapshot()  # dict of (B,) arrays
+        """Windowed serve statistics (one host transfer): per-slot occupancy
+        and retire rate, decode-step latency mean/max and KLL tail
+        quantiles p50/p95/p99 (ms), over the last ``telemetry_horizon``
+        seconds of engine steps (or ``telemetry_window`` steps in count
+        mode).  All slots decode in lock-step, so the latency window is
+        shared across lanes."""
+        s = self._telem.snapshot()  # (B,)-leading; lane axis squeezed at B=1
+        q = np.atleast_2d(np.asarray(s["decode_ms_q"]))[0]  # (3,): p50/95/99
         return {
-            "slot_occupancy": np.asarray(s["active"]),
-            "slot_retire_rate": np.asarray(s["retired"]),
-            "decode_ms_mean": float(np.asarray(s["decode_ms"])[0]),
-            "decode_ms_max": float(np.asarray(s["decode_ms_max"])[0]),
+            "slot_occupancy": np.atleast_1d(np.asarray(s["active"])),
+            "slot_retire_rate": np.atleast_1d(np.asarray(s["retired"])),
+            "decode_ms_mean": float(np.atleast_1d(np.asarray(s["decode_ms"]))[0]),
+            "decode_ms_max": float(np.atleast_1d(np.asarray(s["decode_ms_max"]))[0]),
+            "decode_ms_p50": float(q[0]),
+            "decode_ms_p95": float(q[1]),
+            "decode_ms_p99": float(q[2]),
+            # steps lost to the event-time engine's capacity (0 = the full
+            # horizon is represented; raise telemetry_window to extend)
+            "telemetry_overflow": self._telem.overflow_count(),
         }
+
+    # -- telemetry checkpoint/restore --------------------------------------
+
+    def save_telemetry(self, directory: str, step: int) -> str:
+        """Checkpoint the windowed serve telemetry (atomic, see
+        :mod:`repro.train.checkpoint`); returns the checkpoint path."""
+        return checkpoint.save(self._telem.state_dict(), directory, step)
+
+    def restore_telemetry(self, directory: str, step: Optional[int] = None) -> int:
+        """Restore telemetry saved by :meth:`save_telemetry` (latest step if
+        unspecified) — serve windows survive an engine restart.  Returns the
+        restored step."""
+        if step is None:
+            step = checkpoint.latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(f"no telemetry checkpoint under {directory}")
+        sd = checkpoint.restore(directory, step, like=self._telem.state_dict())
+        self._telem.load_state_dict(sd)
+        # continue the anchored serve clock from the restored watermark so
+        # post-restore steps are not "late" against the saved window
+        self._telem_t0 = time.perf_counter() - self._telem.last_timestamp()
+        return step

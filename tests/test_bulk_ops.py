@@ -108,6 +108,36 @@ def test_bulk_matches_per_element(algo_name, mname):
         )
 
 
+@pytest.mark.parametrize("mname", sorted(MONOID_CASES))
+def test_flatfit_bulk_matches_per_element(mname):
+    """FlatFIT (eager, mutable — outside ALGORITHMS) conforms to the bulk-op
+    protocol: insert_bulk/evict_bulk ≡ per-element loops, interleaved with
+    compressing queries to exercise rewritten index chains."""
+    from repro.core import flatfit
+
+    m, mk, exact = MONOID_CASES[mname]
+    for phases in PHASES:
+        s_ref, s_bulk = flatfit.init(m, 64), flatfit.init(m, 64)
+        for step, (kind, n) in enumerate(phases):
+            if kind == "i":
+                vals = mk(n)
+                for i in range(n):
+                    s_ref = flatfit.insert(m, s_ref, swag_base.tree_index(vals, i))
+                s_bulk = flatfit.insert_bulk(m, s_bulk, vals)
+            else:
+                for _ in range(n):
+                    s_ref = flatfit.evict(m, s_ref)
+                s_bulk = flatfit.evict_bulk(m, s_bulk, n)
+            if step % 2:  # compress one side only: results must not change
+                flatfit.query_mut(m, s_bulk)
+            assert flatfit.size(s_bulk) == flatfit.size(s_ref)
+            _assert_tree_close(
+                m.lower(flatfit.query(m, s_bulk)),
+                m.lower(flatfit.query(m, s_ref)),
+                exact, (mname, phases),
+            )
+
+
 def test_bulk_ops_jittable():
     m = monoids.sum_monoid()
     for algo_name, algo in ALGORITHMS.items():

@@ -35,6 +35,10 @@ CASES = [
     ("bloom", monoids.bloom_monoid(8), st.integers(0, 10_000), True),
     ("countmin", monoids.countmin_monoid(2, 16), st.integers(0, 10_000), True),
     ("hll", monoids.hll_monoid(16), st.integers(0, 10_000), True),
+    # kll: with 3 lifted singletons no compaction triggers, so the merge is
+    # a plain sorted union — associative and commutative bit-exactly
+    ("kll", monoids.kll_monoid(k=32, levels=4),
+     st.integers(-100, 100).map(float), True),
     ("mean", monoids.mean_monoid(), st.integers(-100, 100).map(float), False),
     ("geomean", monoids.geomean_monoid(),
      st.integers(1, 100).map(float), False),

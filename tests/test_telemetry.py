@@ -115,6 +115,131 @@ def test_observe_is_single_dispatch():
     assert calls == [1, 1]  # one jitted call per observation, nothing else
 
 
+def test_kll_quantiles_through_telemetry_window():
+    """The KLL sketch as a telemetry metric: windowed p50/p95 rank accuracy
+    despite the chunked engine's combine reassociation."""
+    window = 256
+    telem = WindowedTelemetry(
+        {"q": monoids.kll_monoid(k=128, levels=6)}, window
+    )
+    vals = rng.standard_normal(600).astype(np.float32)
+    telem.observe_bulk({"q": jnp.asarray(vals)})
+    est = np.asarray(telem.snapshot()["q"])  # (3,): p50/p95/p99
+    win = vals[-window:]
+    for e, q in zip(est, (0.5, 0.95, 0.99)):
+        rank = (win <= e).mean()
+        assert abs(rank - q) < 0.06, (q, e, rank)
+
+
+def test_horizon_mode_matches_manual_event_window():
+    """horizon= telemetry folds exactly the observations inside
+    (now - horizon, now], independent of arrival cadence."""
+    telem = WindowedTelemetry(
+        {"mx": monoids.max_monoid(), "mean": monoids.mean_monoid()},
+        horizon=5.0, capacity=32,
+    )
+    ts = np.cumsum(rng.uniform(0.5, 1.5, 20)).astype(np.float32)
+    vals = rng.standard_normal(20).astype(np.float32)
+    for t, v in zip(ts, vals):
+        telem.observe({"mx": jnp.float32(v), "mean": jnp.float32(v)}, ts=float(t))
+        s = telem.snapshot()
+        in_win = vals[(ts > t - 5.0) & (ts <= t)]
+        assert abs(float(s["mx"]) - in_win.max()) < 1e-6
+        assert abs(float(s["mean"]) - in_win.mean()) < 1e-5
+    # bulk ingest of the same in-order stream lands on the same state
+    t2 = WindowedTelemetry(
+        {"mx": monoids.max_monoid(), "mean": monoids.mean_monoid()},
+        horizon=5.0, capacity=32,
+    )
+    outs = t2.observe_bulk(
+        {"mx": jnp.asarray(vals), "mean": jnp.asarray(vals)}, ts=jnp.asarray(ts)
+    )
+    assert abs(float(t2.snapshot()["mx"]) - float(telem.snapshot()["mx"])) < 1e-6
+    t_last = ts[-1]
+    in_win = vals[(ts > t_last - 5.0) & (ts <= t_last)]
+    # in-order + slack=0: released row i aligns with input row i
+    assert abs(float(np.asarray(outs["mx"])[len(vals) - 1, 0]) - in_win.max()) < 1e-6
+
+
+def test_window_and_horizon_are_exclusive():
+    with pytest.raises(ValueError, match="exactly one"):
+        WindowedTelemetry({"mx": monoids.max_monoid()})
+    with pytest.raises(ValueError, match="exactly one"):
+        WindowedTelemetry({"mx": monoids.max_monoid()}, 8, horizon=1.0)
+
+
+@pytest.mark.parametrize("mode", ["count", "horizon"])
+def test_state_dict_checkpoint_round_trip(mode, tmp_path):
+    """Telemetry carries survive a save/restore through the checkpoint
+    layer; a freshly-configured instance adopts them exactly."""
+    from repro.train import checkpoint
+
+    def make():
+        if mode == "count":
+            return WindowedTelemetry({"mx": monoids.max_monoid()}, 6)
+        return WindowedTelemetry(
+            {"mx": monoids.max_monoid()}, horizon=50.0, capacity=16
+        )
+
+    t1 = make()
+    vals = rng.standard_normal(9).astype(np.float32)
+    for i, v in enumerate(vals):
+        t1.observe({"mx": jnp.float32(v)}, ts=float(i))
+    checkpoint.save(t1.state_dict(), str(tmp_path), 3)
+    t2 = make()
+    t2.load_state_dict(checkpoint.restore(str(tmp_path), 3, like=t2.state_dict()))
+    assert float(t2.snapshot()["mx"]) == float(t1.snapshot()["mx"])
+    # the restored window keeps evolving identically
+    t1.observe({"mx": jnp.float32(-9.0)}, ts=9.0)
+    t2.observe({"mx": jnp.float32(-9.0)}, ts=9.0)
+    assert float(t2.snapshot()["mx"]) == float(t1.snapshot()["mx"])
+    if mode == "horizon":
+        # the restored clock continues from the saved watermark, so a
+        # default-ts observation is NOT dropped as late
+        assert t2.last_timestamp() == 9.0
+        t2.observe({"mx": jnp.float32(77.0)})
+        assert float(t2.snapshot()["mx"]) == 77.0
+    # structure mismatch is rejected
+    t3 = WindowedTelemetry({"other": monoids.max_monoid()}, 6)
+    with pytest.raises(ValueError, match="mismatch"):
+        t3.load_state_dict(t2.state_dict())
+    # same tree structure but different capacities/window is also rejected
+    # (a silent load would run the engine with mismatched static shapes)
+    if mode == "count":
+        t4 = WindowedTelemetry({"mx": monoids.max_monoid()}, 12)
+    else:
+        t4 = WindowedTelemetry(
+            {"mx": monoids.max_monoid()}, horizon=50.0, capacity=64
+        )
+    with pytest.raises(ValueError, match="shape mismatch"):
+        t4.load_state_dict(t1.state_dict())
+
+
+def test_horizon_bulk_with_slack_masks_unreleased_rows():
+    """slack > 0 holds recent rows in the reorder buffer: their bulk-output
+    rows must be identities (lowered to the monoid's empty value), never
+    garbage pad folds — and outputs released by a LATER chunk's watermark
+    advance (possibly more than that chunk's length) are all returned."""
+    telem = WindowedTelemetry(
+        {"s": monoids.sum_monoid(jnp.int32)}, horizon=100.0, slack=5.0,
+        capacity=32, buffer=8,
+    )
+    # watermark = 10 - 5 = 5: rows at ts 9 and 10 wait in the buffer
+    ts = jnp.asarray([0.0, 1.0, 2.0, 9.0, 10.0])
+    outs = telem.observe_bulk(
+        {"s": jnp.asarray([1, 1, 1, 1, 1], jnp.int32)}, ts=ts
+    )
+    got = np.asarray(outs["s"])[:, 0]
+    assert got[:3].tolist() == [1, 2, 3]  # released, cumulative in-horizon
+    assert (got[3:] == 0).all()  # held back by slack -> identity, not garbage
+    # a 1-row follow-up chunk advances the watermark to 20, draining BOTH
+    # pending rows: 2 released outputs from a 1-row chunk, none lost
+    outs = telem.observe_bulk({"s": jnp.asarray([1], jnp.int32)},
+                              ts=jnp.asarray([25.0]))
+    got = np.asarray(outs["s"])[:, 0]
+    assert got[:2].tolist() == [4, 5] and (got[2:] == 0).all()
+
+
 def test_windowed_stream_stats_reference():
     from repro.data.stream import WindowedStreamStats
 
@@ -130,7 +255,7 @@ def test_windowed_stream_stats_reference():
     assert stats.seen_recently(4) and stats.seen_recently(2)
 
 
-def test_serve_engine_telemetry_surface():
+def test_serve_engine_telemetry_surface(tmp_path):
     from repro.configs import ARCHS
     from repro.models.factory import reduced_config
     from repro.serve.engine import DecodeEngine, Request
@@ -152,3 +277,24 @@ def test_serve_engine_telemetry_surface():
     assert t["slot_retire_rate"].shape == (2,)
     assert float(t["slot_retire_rate"].sum()) > 0  # requests retired
     assert t["decode_ms_max"] >= t["decode_ms_mean"] > 0
+    # KLL tail-latency quantiles: ordered and inside the observed range
+    assert 0 < t["decode_ms_p50"] <= t["decode_ms_p95"] <= t["decode_ms_p99"]
+    assert t["decode_ms_p99"] <= t["decode_ms_max"] + 1e-6
+    # telemetry survives a restart: save, restore into a fresh engine
+    eng.save_telemetry(str(tmp_path), step=1)
+    eng2 = DecodeEngine(cfg, params, batch_slots=2, cache_len=32,
+                        telemetry_window=16)
+    assert eng2.restore_telemetry(str(tmp_path)) == 1
+    t2 = eng2.telemetry()
+    assert np.allclose(t2["slot_occupancy"], t["slot_occupancy"])
+    assert t2["decode_ms_p99"] == t["decode_ms_p99"]
+    # single-slot engines must keep a working telemetry surface (the lane
+    # axis is squeezed away at batch == 1)
+    eng1 = DecodeEngine(cfg, params, batch_slots=1, cache_len=32,
+                        telemetry_window=16)
+    eng1.submit(Request(rid=9, prompt=model_rng.integers(
+        0, cfg.vocab_size, 5).astype(np.int32), max_new=2))
+    eng1.run_until_drained(max_steps=10)
+    t1 = eng1.telemetry()
+    assert t1["slot_occupancy"].shape == (1,)
+    assert 0 < t1["decode_ms_p50"] <= t1["decode_ms_p99"]

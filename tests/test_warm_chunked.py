@@ -135,6 +135,94 @@ def test_carry_round_trip_and_continuation(algo_name, mname):
 
 
 # ---------------------------------------------------------------------------
+# FlatFIT (eager, outside ALGORITHMS) conforms to the carry protocol
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mname", sorted(MONOID_CASES))
+def test_flatfit_state_to_carry_matches_history_truth(mname):
+    """Carry extracted from a (compressed) FlatFIT buffer equals the suffix
+    folds computed directly from the value history, and leaves the source
+    state untouched (the sweep runs on a copy)."""
+    from repro.core import flatfit
+
+    m, mk, exact = MONOID_CASES[mname]
+    window = 8
+    st = flatfit.init(m, 64)
+    hist: list = []
+    vals = mk((25,))
+    for i in range(25):
+        st = flatfit.insert(m, st, swag_base.tree_index(vals, i))
+        hist.append(i)
+        if flatfit.size(st) > window:
+            st = flatfit.evict(m, st)
+            hist.pop(0)
+        if i % 5 == 0:
+            flatfit.query_mut(m, st)  # exercise compressed layouts
+    carry = flatfit.state_to_carry(m, st, window)
+    assert flatfit.size(st) == window  # extraction must not mutate
+    h = window - 1
+    for t in range(h):
+        acc = m.identity()
+        for j in hist[len(hist) - (h - t):]:
+            acc = m.combine(acc, m.lift(swag_base.tree_index(vals, j)))
+        _assert_tree_close(
+            swag_base.tree_index(carry, t), acc, exact, (mname, t)
+        )
+
+
+@pytest.mark.parametrize("mname", sorted(MONOID_CASES))
+def test_flatfit_carry_round_trip_and_continuation(mname):
+    """carry → FlatFIT state (exact compressed-layout specialization, ANY
+    monoid) → carry round-trips, and the rebuilt buffer keeps behaving like
+    a per-element DABA Lite window seeded with the same elements."""
+    from repro.core import flatfit
+
+    m, mk, exact = MONOID_CASES[mname]
+    window, n_ops = 8, 20
+    st, vals = _warm_single(ALGORITHMS["daba_lite"], m, mk, n_ops, window)
+    carry = swag_base.state_to_carry(ALGORITHMS["daba_lite"], m, st, window)
+    ff = flatfit.carry_to_state(m, carry, 64)
+    carry2 = flatfit.state_to_carry(m, ff, window)
+    _assert_tree_close(carry, carry2, exact, (mname, "roundtrip"))
+    h = window - 1
+    ref = ALGORITHMS["daba_lite"].init(m, 64)
+    for i in range(n_ops - h, n_ops):
+        ref = ALGORITHMS["daba_lite"].insert(m, ref, swag_base.tree_index(vals, i))
+    assert flatfit.size(ff) == h
+    more = mk((4,))
+    for i in range(4):
+        v = swag_base.tree_index(more, i)
+        ff = flatfit.insert(m, ff, v)
+        ref = ALGORITHMS["daba_lite"].insert(m, ref, v)
+        ff = flatfit.evict(m, ff)
+        ref = ALGORITHMS["daba_lite"].evict(m, ref)
+        _assert_tree_close(
+            m.lower(flatfit.query(m, ff)),
+            m.lower(ALGORITHMS["daba_lite"].query(m, ref)),
+            exact, (mname, "continue", i),
+        )
+
+
+def test_flatfit_state_from_chunk_dispatcher():
+    """The swag_base dispatcher reaches FlatFIT through carry_to_state: one
+    suffix scan laid out as a compressed buffer ≡ bulk insert."""
+    from repro.core import flatfit
+
+    m, mk, exact = MONOID_CASES["affine_i32"]
+    vals = mk((7,))
+    st = swag_base.state_from_chunk(flatfit, m, vals, 32)
+    ref = flatfit.insert_bulk(m, flatfit.init(m, 32), vals)
+    assert flatfit.size(st) == flatfit.size(ref) == 7
+    for _ in range(7):
+        _assert_tree_close(
+            m.lower(flatfit.query(m, st)), m.lower(flatfit.query(m, ref)),
+            exact, "state_from_chunk",
+        )
+        st, ref = flatfit.evict(m, st), flatfit.evict(m, ref)
+
+
+# ---------------------------------------------------------------------------
 # state_from_chunk: vectorized rebuild ≡ bulk insert into fresh state
 # ---------------------------------------------------------------------------
 

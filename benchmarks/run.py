@@ -13,6 +13,7 @@ output.
   Fig 12 → bench_eventtime    event-time windows, bursty stream
   §2.1   → bench_batched      SIMD/vmap batched SWAG (beyond paper)
   §8.2   → bench_chunked      chunked bulk engine vs per-element stream
+  beyond → bench_keyed        keyed window store: K per-key windows, bulk
   §Roofline → roofline_table  rendered from experiments/dryrun/*.json
 """
 
@@ -63,7 +64,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: latency,throughput,dynamic,eventtime,"
-                         "batched,chunked,roofline")
+                         "batched,chunked,keyed,roofline")
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<name>.json summaries")
@@ -84,6 +85,7 @@ def main() -> None:
         bench_chunked,
         bench_dynamic,
         bench_eventtime,
+        bench_keyed,
         bench_latency,
         bench_throughput,
         roofline_table,
@@ -131,6 +133,14 @@ def main() -> None:
         else:
             rows = bench_chunked.main()
         done("chunked", rows)
+    if on("keyed"):
+        print("# beyond-paper — keyed window store (per-key windows, bulk)")
+        if args.quick:
+            rows = bench_keyed.main(Ks=(256, 4096), chunks=(1024,),
+                                    T=16384, loop_T=400)
+        else:
+            rows = bench_keyed.main()
+        done("keyed", rows)
     if on("roofline"):
         print("# §Roofline — dry-run derived table")
         rows = roofline_table.main()

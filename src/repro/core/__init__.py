@@ -40,6 +40,12 @@ event_time       event-time windows: TimestampedWindow (per-element horizon
                  algorithm) and EventTimeChunkedStream (bulk out-of-order
                  engine: (ts, x) chunks, bounded reorder buffer, late-data
                  policies, exact non-commutative merge order)
+keyed            per-key sliding windows at scale: KeyDirectory (JAX-native
+                 open-addressing key → slot map with LRU/TTL eviction),
+                 KeyedWindowStore (slots × carry-lane windows, one fused
+                 segment-wise bulk update per mixed-key chunk),
+                 KeyedChunkedStream (chunked driver) and ShardedKeyedStore
+                 (hash-sharded key space over a mesh axis, collective-free)
 """
 
 from repro.core import (
@@ -48,6 +54,7 @@ from repro.core import (
     daba_lite,
     event_time,
     flatfit,
+    keyed,
     monoids,
     recalc,
     soe,
@@ -57,6 +64,12 @@ from repro.core import (
     two_stacks_lite,
 )
 from repro.core.event_time import EventTimeChunkedStream, TimestampedWindow
+from repro.core.keyed import (
+    KeyDirectory,
+    KeyedChunkedStream,
+    KeyedWindowStore,
+    ShardedKeyedStore,
+)
 from repro.core.monoids import (
     Monoid,
     counting,
@@ -71,7 +84,7 @@ from repro.core.swag_base import (
     insert_bulk,
     state_to_carry,
 )
-from repro.core.telemetry import WindowedTelemetry
+from repro.core.telemetry import KeyedTelemetry, WindowedTelemetry
 
 ALGORITHMS = {
     "recalc": recalc,
@@ -98,8 +111,13 @@ __all__ = [
     "Monoid",
     "SWAG",
     "WindowedTelemetry",
+    "KeyedTelemetry",
     "EventTimeChunkedStream",
     "TimestampedWindow",
+    "KeyDirectory",
+    "KeyedWindowStore",
+    "KeyedChunkedStream",
+    "ShardedKeyedStore",
     "counting",
     "get_monoid",
     "available_monoids",

@@ -1,0 +1,859 @@
+"""Keyed window store — per-key sliding windows at million-key scale.
+
+The batched/chunked engines maintain B windows in lock-step: every lane sees
+every element.  A multi-tenant system is the transpose — each event belongs
+to ONE key (user, request, partition) out of an unbounded universe, and only
+that key's window moves.  This module provides that layer over the existing
+SWAG machinery:
+
+  * :class:`KeyDirectory` — a JAX-native open-addressing hash directory
+    (key → dense slot): vectorized lookup, sequential-per-new-key admission
+    fused into the chunk dispatch, LRU eviction when the slot pool is full
+    and TTL expiry for idle keys — the hot set stays bounded (``slots``)
+    while the key universe is unbounded.
+  * :class:`KeyedWindowStore` — ``slots`` independent count-based windows
+    stored as stacked SoA lanes of the warm-carry representation
+    (:mod:`repro.core.swag_base`): lane t of a slot's carry is the suffix
+    fold of its last ``window - 1 - t`` elements.  Any bulk-protocol SWAG
+    algorithm interoperates: ``export_states`` / ``adopt_states`` convert
+    lanes to/from live per-element states via ``carry_to_state`` /
+    ``state_to_carry``.
+  * :meth:`KeyedWindowStore.update_chunk` — the bulk path: a mixed-key
+    ``(key, x)`` chunk becomes ONE fused segment-wise dispatch: stable sort
+    by key (arrival order preserved within key — non-commutative monoids
+    stay bit-exact vs the per-key per-element reference), segment
+    boundaries, directory admission, per-row window outputs via
+    variable-span range folds (:func:`repro.core.event_time.range_fold`),
+    and one scatter of refreshed carries — instead of K tiny per-key
+    updates (cf. the bulk-eviction direction of arXiv 2307.11210, extended
+    across the key dimension).
+  * :class:`KeyedChunkedStream` — the chunk-at-a-time driver (jit cache,
+    ragged final chunk padding) mirroring
+    :class:`repro.core.chunked.ChunkedStream`.
+  * :class:`ShardedKeyedStore` — device sharding of the key space:
+    ``shard_map`` over a mesh axis, key → shard by hash, per-shard stores
+    and directories, ZERO collectives in steady state (each shard masks the
+    chunk down to its own rows; outputs stay shard-local).
+
+Keys are non-negative int32 (hash-partition larger key spaces before
+ingest); ``-1``/``-2`` are directory sentinels.  Within one chunk at most
+``slots`` distinct keys can be admitted (later ones are counted in
+``n_dropped`` and emit identity outputs) and an LRU victim is never a slot
+already touched by the same chunk, so slot assignment is deterministic.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import swag_base
+from repro.core.event_time import range_fold, range_fold_invertible
+from repro.core.monoids import Monoid, _hash_u32
+from repro.core.swag_base import chunk_length
+
+PyTree = Any
+
+EMPTY = jnp.int32(-1)  # free table entry / free slot
+DELETED = jnp.int32(-2)  # tombstone: probes continue through it
+_KEY_SENTINEL = jnp.int32(2**31 - 1)  # masked rows sort last
+
+
+def _bc(mask, leaf):
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - mask.ndim))
+
+
+def _where_rows(mask, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(_bc(mask, x), x, y), a, b)
+
+
+def _mask_tree(tree: PyTree, mask, ident: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda a, i: jnp.where(_bc(mask, a), a, jnp.asarray(i, a.dtype)),
+        tree,
+        ident,
+    )
+
+
+def _take0(tree: PyTree, idx) -> PyTree:
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+# ---------------------------------------------------------------------------
+# Segmented scans (key-partitioned chunks)
+# ---------------------------------------------------------------------------
+
+
+def seg_suffix_scan(monoid: Monoid, end_flags, lifted: PyTree) -> PyTree:
+    """Suffix scan that resets at segment ends: ``out[i] = x_i ⊗ … ⊗ x_e(i)``
+    where ``e(i)`` is the last index of i's segment (``end_flags[e] = True``).
+
+    Built from the classic segmented-scan pair operator on the flipped
+    array with swapped combine operands, mirroring the operand-order
+    discipline of :func:`repro.core.swag_base.suffix_scan` — exact for
+    non-commutative monoids.
+    """
+    flags = jnp.flip(jnp.asarray(end_flags, bool))
+    vals = jax.tree.map(lambda a: jnp.flip(a, 0), lifted)
+
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        merged = monoid.combine(vb, va)  # flipped order: b is OLDER
+        v = jax.tree.map(
+            lambda mv, bv: jnp.where(_bc(fb, bv), bv, mv), merged, vb
+        )
+        return (fa | fb, v)
+
+    _, out = jax.lax.associative_scan(comb, (flags, vals), axis=0)
+    return jax.tree.map(lambda a: jnp.flip(a, 0), out)
+
+
+# ---------------------------------------------------------------------------
+# Key directory
+# ---------------------------------------------------------------------------
+
+
+class KeyDirectory:
+    """Open-addressing key → slot directory as plain JAX arrays.
+
+    ``slots`` dense window slots are addressed through a power-of-two probe
+    table of ``dir_factor * slots`` entries (linear probing, ≤ ``probes``
+    steps, tombstoned deletes that inserts reuse).  All operations are pure
+    functions of the state dict, usable inside jit:
+
+      * :meth:`lookup` — fully vectorized (C, probes) gather for a whole
+        chunk of keys;
+      * :meth:`admit_row` — one key: find-or-allocate.  Allocation takes a
+        free slot while any exists, else evicts the least-recently-used
+        slot NOT touched by the current chunk (``touched``) and tombstones
+        its table entry.  Taken-branch ``lax.cond`` keeps the hit path at
+        O(probes);
+      * :meth:`expire` — vectorized TTL sweep freeing every slot idle
+        longer than ``ttl``.
+    """
+
+    def __init__(self, slots: int, *, dir_factor: int = 2, probes: int = 32):
+        self.slots = int(slots)
+        if self.slots < 1:
+            raise ValueError(f"slots must be >= 1, got {slots}")
+        size = 8
+        while size < dir_factor * self.slots:
+            size *= 2
+        self.size = size
+        self.probes = min(int(probes), size)
+
+    def init(self) -> PyTree:
+        return {
+            "table_key": jnp.full((self.size,), EMPTY, jnp.int32),
+            "table_slot": jnp.zeros((self.size,), jnp.int32),
+            "slot_key": jnp.full((self.slots,), EMPTY, jnp.int32),
+            "last_used": jnp.full((self.slots,), -jnp.inf, jnp.float32),
+            "n_live": jnp.zeros((), jnp.int32),
+            "n_evicted": jnp.zeros((), jnp.int32),
+            "n_failed": jnp.zeros((), jnp.int32),
+        }
+
+    def _probe_pos(self, key):
+        h = _hash_u32(jnp.asarray(key, jnp.int32), 0).astype(jnp.int32)
+        offs = jnp.arange(self.probes, dtype=jnp.int32)
+        return (h + offs) & jnp.int32(self.size - 1)
+
+    def lookup(self, state: PyTree, keys) -> tuple:
+        """Vectorized chunk lookup: ``(slots, found)`` — slot -1 if absent.
+        Negative keys (the sentinel range) are never found, so callers may
+        pad query batches with -1."""
+        keys = jnp.asarray(keys, jnp.int32)
+        pos = jax.vmap(self._probe_pos)(keys)  # (C, P)
+        tk = state["table_key"][pos]
+        eq = tk == keys[:, None]
+        empty = tk == EMPTY
+        before = jnp.cumsum(empty.astype(jnp.int32), axis=1) - empty
+        hit = eq & (before == 0)
+        found = hit.any(axis=1) & (keys >= 0)
+        j = jnp.argmax(hit, axis=1)
+        slot = state["table_slot"][
+            jnp.take_along_axis(pos, j[:, None], axis=1)[:, 0]
+        ]
+        return jnp.where(found, slot, -1), found
+
+    def admit_row(self, state: PyTree, touched, key, ts):
+        """Find-or-allocate one key; returns ``(state, touched, slot, new)``.
+
+        ``touched`` is the (slots,) mask of slots used by the current chunk
+        — LRU eviction never reclaims one, so a chunk with more distinct
+        keys than free+evictable slots fails the excess admissions
+        (slot -1, ``n_failed``) instead of corrupting earlier segments.
+        """
+        key = jnp.asarray(key, jnp.int32)
+        ts = jnp.asarray(ts, jnp.float32)
+        pos = self._probe_pos(key)
+        tk = state["table_key"][pos]
+        eq = tk == key
+        empty = tk == EMPTY
+        free = empty | (tk == DELETED)
+        before = jnp.cumsum(empty.astype(jnp.int32)) - empty
+        hit = eq & (before == 0)
+        found = hit.any()
+
+        def on_found(st, tch):
+            slot = st["table_slot"][pos[jnp.argmax(hit)]]
+            st = dict(st, last_used=st["last_used"].at[slot].set(ts))
+            return st, tch.at[slot].set(True), slot, jnp.asarray(False)
+
+        def on_miss(st, tch):
+            ins_ok = free.any()
+            ins_pos = pos[jnp.argmax(free)]
+            use_free = st["n_live"] < self.slots
+            free_slot = jnp.argmax(st["slot_key"] == EMPTY).astype(jnp.int32)
+            cost = jnp.where(tch, jnp.inf, st["last_used"])
+            victim = jnp.argmin(cost).astype(jnp.int32)
+            evict_ok = jnp.isfinite(cost[victim])
+            slot = jnp.where(use_free, free_slot, victim)
+            ok = ins_ok & (use_free | evict_ok)
+            evicting = ok & ~use_free
+            # tombstone the victim's table entry (guarded drop-scatter)
+            old_key = st["slot_key"][victim]
+            vpos = self._probe_pos(old_key)
+            vtk = st["table_key"][vpos]
+            vempty = vtk == EMPTY
+            vbefore = jnp.cumsum(vempty.astype(jnp.int32)) - vempty
+            vhit = (vtk == old_key) & (vbefore == 0)
+            vslot = jnp.where(
+                evicting & vhit.any(), vpos[jnp.argmax(vhit)], self.size
+            )
+            table_key = st["table_key"].at[vslot].set(DELETED, mode="drop")
+            wr = jnp.where(ok, ins_pos, self.size)
+            sl = jnp.where(ok, slot, self.slots)
+            st = dict(
+                st,
+                table_key=table_key.at[wr].set(key, mode="drop"),
+                table_slot=st["table_slot"].at[wr].set(slot, mode="drop"),
+                slot_key=st["slot_key"].at[sl].set(key, mode="drop"),
+                last_used=st["last_used"].at[sl].set(ts, mode="drop"),
+                n_live=st["n_live"] + (ok & use_free),
+                n_evicted=st["n_evicted"] + evicting,
+                n_failed=st["n_failed"] + ~ok,
+            )
+            tch = tch.at[sl].set(True, mode="drop")
+            return st, tch, jnp.where(ok, slot, -1), ok
+
+        return jax.lax.cond(found, on_found, on_miss, state, touched)
+
+    def expire(self, state: PyTree, now, ttl) -> tuple:
+        """Free every slot idle longer than ``ttl``; returns
+        ``(state, expired)`` with the (slots,) expiry mask (vectorized)."""
+        now = jnp.asarray(now, jnp.float32)
+        live = state["slot_key"] != EMPTY
+        expired = live & (now - state["last_used"] > jnp.asarray(ttl, jnp.float32))
+        te_slot = jnp.clip(state["table_slot"], 0, self.slots - 1)
+        kill = (state["table_key"] >= 0) & expired[te_slot]
+        state = dict(
+            state,
+            table_key=jnp.where(kill, DELETED, state["table_key"]),
+            slot_key=jnp.where(expired, EMPTY, state["slot_key"]),
+            last_used=jnp.where(expired, -jnp.inf, state["last_used"]),
+            n_live=state["n_live"] - expired.sum(dtype=jnp.int32),
+            n_evicted=state["n_evicted"] + expired.sum(dtype=jnp.int32),
+        )
+        return state, expired
+
+
+# ---------------------------------------------------------------------------
+# The keyed store
+# ---------------------------------------------------------------------------
+
+
+class KeyedWindowStore:
+    """``slots`` independent per-key count windows as stacked carry lanes.
+
+    State layout (SoA, one leading slot axis everywhere):
+
+      * ``carry``  (slots, window-1, ...) — per-slot warm-carry tails
+        (entry t = suffix fold of the slot's last ``window-1-t`` elements,
+        front-truncated; the exact representation of
+        :mod:`repro.core.swag_base`'s carry protocol);
+      * ``last``   (slots, ...)           — the slot's latest window
+        aggregate (what :meth:`query` serves);
+      * ``n_seen`` (slots,)               — elements ever folded per slot;
+      * ``dir``                           — the :class:`KeyDirectory` state;
+      * ``tick``   ()                     — default recency clock.
+
+    :meth:`update_chunk` is pure (jit it, or use :class:`KeyedChunkedStream`
+    which caches the jit per chunk length).
+    """
+
+    def __init__(
+        self,
+        monoid: Monoid,
+        window: int,
+        slots: int,
+        *,
+        dir_factor: int = 2,
+        probes: int = 32,
+        ttl: Optional[float] = None,
+        use_inverse: Optional[bool] = None,
+    ):
+        self.monoid = monoid
+        self.window = int(window)
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.h = self.window - 1
+        self.slots = int(slots)
+        self.directory = KeyDirectory(slots, dir_factor=dir_factor, probes=probes)
+        self.ttl = ttl
+        if use_inverse is None:
+            use_inverse = monoid.invertible and monoid.commutative
+        self._range_fold = range_fold_invertible if use_inverse else range_fold
+
+    # -- state -------------------------------------------------------------
+
+    def init_state(self) -> PyTree:
+        ident = self.monoid.identity()
+
+        def fill(lead: tuple):
+            return jax.tree.map(
+                lambda i: jnp.broadcast_to(
+                    jnp.asarray(i), lead + jnp.asarray(i).shape
+                ).copy(),
+                ident,
+            )
+
+        return {
+            "dir": self.directory.init(),
+            "carry": fill((self.slots, self.h)),
+            "last": fill((self.slots,)),
+            "n_seen": jnp.zeros((self.slots,), jnp.int32),
+            "tick": jnp.zeros((), jnp.float32),
+            "n_dropped": jnp.zeros((), jnp.int32),
+        }
+
+    def query(self, state: PyTree, keys) -> tuple:
+        """Latest window aggregate per key: ``(aggs, found)`` — identity for
+        unknown keys.  Pure; vectorized over (C,) keys."""
+        keys = jnp.asarray(keys, jnp.int32)
+        slot, found = self.directory.lookup(state["dir"], keys)
+        aggs = _take0(state["last"], jnp.clip(slot, 0, self.slots - 1))
+        return _mask_tree(aggs, found, self.monoid.identity()), found
+
+    def expire(self, state: PyTree, now=None) -> PyTree:
+        """TTL sweep: evict every key idle longer than ``ttl`` and reset its
+        lanes (pure; no-op when ``ttl`` is None)."""
+        if self.ttl is None:
+            return state
+        now = state["tick"] if now is None else jnp.asarray(now, jnp.float32)
+        dir_state, expired = self.directory.expire(state["dir"], now, self.ttl)
+        return dict(
+            state,
+            dir=dir_state,
+            carry=self._reset_lanes(state["carry"], expired),
+            last=self._reset_lanes(state["last"], expired),
+            n_seen=jnp.where(expired, 0, state["n_seen"]),
+        )
+
+    def _reset_lanes(self, lanes: PyTree, mask) -> PyTree:
+        ident = self.monoid.identity()
+        return jax.tree.map(
+            lambda a, i: jnp.where(
+                mask.reshape((self.slots,) + (1,) * (a.ndim - 1)),
+                jnp.asarray(i, a.dtype),
+                a,
+            ),
+            lanes,
+            ident,
+        )
+
+    # -- the fused chunk update --------------------------------------------
+
+    def update_chunk(self, state: PyTree, keys, xs, ts=None, mask=None):
+        """One mixed-key chunk: ``keys`` (C,), ``xs`` (C, ...) raw inputs.
+
+        Returns ``(state, ys, info)``: ``ys`` (C, ...) per-row window
+        aggregates (pre-``lower``) aligned with the inputs — row j is the
+        fold of the last ``min(window, seen)`` elements OF ROW j'S KEY —
+        and ``info`` with per-row ``slots`` / ``dropped`` and the admission
+        counters.  ``ts`` (scalar or (C,)) feeds directory recency (and the
+        TTL clock); defaults to an internal tick.  ``mask`` (C,) pads a
+        ragged final chunk (False rows are ignored and emit identities).
+        """
+        m = self.monoid
+        ident = m.identity()
+        S, W, h = self.slots, self.window, self.h
+        keys = jnp.asarray(keys, jnp.int32)
+        C = int(keys.shape[0])
+        valid = jnp.ones((C,), bool) if mask is None else jnp.asarray(mask, bool)
+        tick = state["tick"] + 1.0
+        if ts is None:
+            ts_row = jnp.broadcast_to(tick, (C,))
+        else:
+            ts_row = jnp.broadcast_to(jnp.asarray(ts, jnp.float32), (C,))
+
+        # -- stable sort by key: segments, arrival order kept within key --
+        order = jnp.argsort(jnp.where(valid, keys, _KEY_SENTINEL), stable=True)
+        inv = jnp.argsort(order)
+        ks = keys[order]
+        vs = valid[order]
+        tss = ts_row[order]
+        xss = _take0(xs, order)
+        idx = jnp.arange(C, dtype=jnp.int32)
+        prev = jnp.concatenate([ks[:1] - 1, ks[:-1]])
+        seg_head = vs & ((idx == 0) | (ks != prev))
+        nxt_head = jnp.concatenate([seg_head[1:], jnp.ones((1,), bool)])
+        nxt_invalid = jnp.concatenate([~vs[1:], jnp.ones((1,), bool)])
+        seg_end = vs & (nxt_head | nxt_invalid)
+        sid = jnp.clip(jnp.cumsum(seg_head.astype(jnp.int32)) - 1, 0, C - 1)
+
+        # -- directory admission: one sequential pass over segment HEADS --
+        def body(i, acc):
+            dir_state, touched, head_slots, new_mask = acc
+
+            def admit(dir_state, touched, head_slots, new_mask):
+                dir_state, touched, slot, new = self.directory.admit_row(
+                    dir_state, touched, ks[i], tss[i]
+                )
+                return (
+                    dir_state,
+                    touched,
+                    head_slots.at[i].set(slot),
+                    new_mask.at[i].set(new),
+                )
+
+            return jax.lax.cond(
+                seg_head[i],
+                admit,
+                lambda d, t, hs, nm: (d, t, hs, nm),
+                dir_state,
+                touched,
+                head_slots,
+                new_mask,
+            )
+
+        dir_state, _, head_slots, new_heads = jax.lax.fori_loop(
+            0,
+            C,
+            body,
+            (
+                state["dir"],
+                jnp.zeros((S,), bool),
+                jnp.full((C,), -1, jnp.int32),
+                jnp.zeros((C,), bool),
+            ),
+        )
+
+        # -- per-segment fields broadcast to rows --------------------------
+        scat = jnp.where(seg_head, sid, C)
+        head_pos = jnp.zeros((C,), jnp.int32).at[scat].set(idx, mode="drop")
+        slot_by_seg = jnp.full((C,), -1, jnp.int32).at[scat].set(
+            head_slots, mode="drop"
+        )
+        new_by_seg = jnp.zeros((C,), bool).at[scat].set(new_heads, mode="drop")
+        end_pos = jnp.zeros((C,), jnp.int32).at[
+            jnp.where(seg_end, sid, C)
+        ].set(idx, mode="drop")
+        a = head_pos[sid]
+        b = end_pos[sid]
+        slot = slot_by_seg[sid]
+        row_ok = vs & (slot >= 0)
+        cslot = jnp.clip(slot, 0, S - 1)
+        p = idx - a  # position within the segment
+        n_seg = b - a + 1
+
+        # -- reset lanes claimed by newly-admitted keys --------------------
+        reset = jnp.zeros((S,), bool).at[
+            jnp.where(seg_head & new_heads & (head_slots >= 0), head_slots, S)
+        ].set(True, mode="drop")
+        carry0 = self._reset_lanes(state["carry"], reset)
+        n_seen0 = jnp.where(reset, 0, state["n_seen"])
+
+        # -- lift + intra-chunk variable-span folds ------------------------
+        lifted = _mask_tree(jax.vmap(m.lift)(xss), row_ok, ident)
+        starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
+        intra = self._range_fold(m, lifted, starts, idx)
+
+        # -- warm prefix: windows reaching into the key's history ----------
+        if h > 0:
+            need_carry = row_ok & (p < h)
+            cvals = jax.tree.map(
+                lambda cl: cl[cslot, jnp.clip(p, 0, h - 1)], carry0
+            )
+            warmed = m.combine(cvals, intra)
+            ys = _where_rows(need_carry, warmed, intra)
+        else:
+            ys = intra
+        ys = _mask_tree(ys, row_ok, ident)
+
+        # -- refreshed carries, one scatter per touched segment ------------
+        if h > 0:
+            ss = seg_suffix_scan(m, seg_end, lifted)
+            t_ax = jnp.arange(h, dtype=jnp.int32)
+            need = h - t_ax  # trailing elements carry entry t must fold
+            in_chunk = need[None, :] <= n_seg[:, None]  # (C, h)
+            src = jnp.clip(b[:, None] - need[None, :] + 1, 0, C - 1)
+            from_chunk = jax.tree.map(lambda s_: s_[src], ss)
+            old_t = jnp.clip(t_ax[None, :] + n_seg[:, None], 0, h - 1)
+            old = jax.tree.map(
+                lambda cl: cl[cslot[:, None], old_t], carry0
+            )
+            whole = jax.tree.map(
+                lambda s_: jnp.broadcast_to(
+                    s_[jnp.clip(a, 0, C - 1)][:, None],
+                    (C, h) + s_.shape[1:],
+                ),
+                ss,
+            )
+            carried = m.combine(old, whole)
+            new_carry = jax.tree.map(
+                lambda fc, cd: jnp.where(_bc(in_chunk, fc), fc, cd),
+                from_chunk,
+                carried,
+            )
+            head_scat = jnp.where(seg_head & row_ok, slot, S)
+            carry1 = jax.tree.map(
+                lambda cl, nv: cl.at[head_scat].set(nv, mode="drop"),
+                carry0,
+                new_carry,
+            )
+        else:
+            head_scat = jnp.where(seg_head & row_ok, slot, S)
+            carry1 = carry0
+
+        # -- per-slot latest aggregate + seen counts -----------------------
+        y_end = _take0(ys, jnp.clip(b, 0, C - 1))
+        last1 = jax.tree.map(
+            lambda ll, v: ll.at[head_scat].set(v, mode="drop"),
+            state["last"],
+            y_end,
+        )
+        # a reclaimed slot that got no scatter this chunk (admission raced a
+        # later failure) must not keep the previous tenant's aggregate
+        landed = jnp.zeros((S,), bool).at[head_scat].set(True, mode="drop")
+        last1 = self._reset_lanes(last1, reset & ~landed)
+        n_seen1 = n_seen0.at[head_scat].add(
+            jnp.where(seg_head & row_ok, n_seg, 0), mode="drop"
+        )
+
+        dropped_sorted = vs & ~row_ok
+        state = dict(
+            state,
+            dir=dir_state,
+            carry=carry1,
+            last=last1,
+            n_seen=n_seen1,
+            tick=jnp.maximum(tick, jnp.max(jnp.where(vs, tss, -jnp.inf))),
+            n_dropped=state["n_dropped"] + dropped_sorted.sum(dtype=jnp.int32),
+        )
+        if self.ttl is not None:
+            state = self.expire(state)
+        info = {
+            "slots": slot[inv],
+            "dropped": dropped_sorted[inv],
+            "n_live": dir_state["n_live"],
+            "n_evicted": dir_state["n_evicted"],
+        }
+        return state, _take0(ys, inv), info
+
+    # -- SWAG interop (the carry protocol across the key dimension) --------
+
+    def export_states(self, state: PyTree, keys, algo, capacity: Optional[int] = None):
+        """Per-key live SWAG states built from the stored carries via
+        ``carry_to_state`` — hand a key's window to any per-element
+        algorithm.  Returns ``(states, found)`` with a leading key axis."""
+        capacity = capacity or self.window + 1
+        keys = jnp.asarray(keys, jnp.int32)
+        slot, found = self.directory.lookup(state["dir"], keys)
+        carries = jax.tree.map(
+            lambda cl: cl[jnp.clip(slot, 0, self.slots - 1)], state["carry"]
+        )
+        states = jax.vmap(
+            lambda c: swag_base.carry_to_state(algo, self.monoid, c, capacity)
+        )(carries)
+        return states, found
+
+    def adopt_states(self, state: PyTree, keys, swag_states, algo) -> PyTree:
+        """Admit ``keys`` and seed their lanes from live per-element SWAG
+        states (``state_to_carry``) — warm-start the store from existing
+        windows.  Keys beyond the slot budget are dropped (directory
+        ``n_failed``)."""
+        keys = jnp.asarray(keys, jnp.int32)
+        carries = jax.vmap(
+            lambda s: swag_base.state_to_carry(algo, self.monoid, s, self.window)
+        )(swag_states)
+        lasts = jax.vmap(lambda s: algo.query(self.monoid, s))(swag_states)
+        counts = jax.vmap(algo.size)(swag_states).astype(jnp.int32)
+        tick = state["tick"] + 1.0
+
+        def body(i, acc):
+            dir_state, touched, slots = acc
+            dir_state, touched, slot, _ = self.directory.admit_row(
+                dir_state, touched, keys[i], tick
+            )
+            return dir_state, touched, slots.at[i].set(slot)
+
+        n = int(keys.shape[0])
+        dir_state, _, slots = jax.lax.fori_loop(
+            0,
+            n,
+            body,
+            (
+                state["dir"],
+                jnp.zeros((self.slots,), bool),
+                jnp.full((n,), -1, jnp.int32),
+            ),
+        )
+        scat = jnp.where(slots >= 0, slots, self.slots)
+        return dict(
+            state,
+            dir=dir_state,
+            carry=jax.tree.map(
+                lambda cl, cv: cl.at[scat].set(cv, mode="drop"),
+                state["carry"],
+                carries,
+            ),
+            last=jax.tree.map(
+                lambda ll, lv: ll.at[scat].set(lv, mode="drop"),
+                state["last"],
+                lasts,
+            ),
+            n_seen=state["n_seen"].at[scat].set(counts, mode="drop"),
+            tick=tick,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Chunk-at-a-time driver
+# ---------------------------------------------------------------------------
+
+
+class KeyedChunkedStream:
+    """Chunked driver over a :class:`KeyedWindowStore` (jit per chunk shape,
+    ragged-final-chunk padding) — the keyed counterpart of
+    :class:`repro.core.chunked.ChunkedStream`.
+
+    Usage::
+
+        eng = KeyedChunkedStream(monoid, window=256, slots=4096, chunk=4096)
+        state = eng.init_state()
+        state, ys, info = eng.process_chunk(state, keys, xs)   # (C,) rows
+        state, ys = eng.stream(keys, xs)                       # whole stream
+    """
+
+    def __init__(
+        self,
+        monoid: Monoid,
+        window: int,
+        slots: int,
+        chunk: Optional[int] = None,
+        **store_kwargs,
+    ):
+        self.store = KeyedWindowStore(monoid, window, slots, **store_kwargs)
+        self.monoid = monoid
+        self.window = self.store.window
+        self.chunk = int(chunk) if chunk is not None else 1024
+        self._jitted: dict = {}
+        self._full_masks: dict = {}
+
+    def init_state(self) -> PyTree:
+        return self.store.init_state()
+
+    def _full_mask(self, C: int):
+        m = self._full_masks.get(C)
+        if m is None:
+            m = self._full_masks[C] = jnp.ones((C,), bool)
+        return m
+
+    def process_chunk(self, state, keys, xs, ts=None, mask=None):
+        """Jitted :meth:`KeyedWindowStore.update_chunk` (cached per chunk
+        length and ts presence)."""
+        C = int(jnp.shape(jnp.asarray(keys))[0])
+        if mask is None:
+            mask = self._full_mask(C)
+        key = (C, ts is not None)
+        fn = self._jitted.get(key)
+        if fn is None:
+            if ts is None:
+                fn = jax.jit(
+                    lambda st, k, x, mk: self.store.update_chunk(
+                        st, k, x, None, mk
+                    )
+                )
+            else:
+                fn = jax.jit(self.store.update_chunk)
+            self._jitted[key] = fn
+        if ts is None:
+            return fn(state, keys, xs, mask)
+        return fn(state, keys, xs, ts, mask)
+
+    def query(self, state, keys):
+        return self.store.query(state, keys)
+
+    def stream(self, keys, xs, *, ts=None, state: Optional[PyTree] = None):
+        """Whole-stream ingest: (T,) keys / (T, ...) values chunk-by-chunk;
+        returns ``(state, (T, ...) per-row window aggregates)``.  The ragged
+        last chunk is padded under a mask so every chunk shares one
+        compilation."""
+        keys = jnp.asarray(keys, jnp.int32)
+        T = int(keys.shape[0])
+        if state is None:
+            state = self.init_state()
+        if T == 0:
+            return state, jax.vmap(self.monoid.lift)(xs)
+        ys = []
+        for lo in range(0, T, self.chunk):
+            hi = min(lo + self.chunk, T)
+            pk = keys[lo:hi]
+            px = jax.tree.map(lambda a_: a_[lo:hi], xs)
+            pt = None if ts is None else jnp.asarray(ts)[lo:hi]
+            if hi - lo < self.chunk:
+                pad = self.chunk - (hi - lo)
+                pk = jnp.concatenate([pk, jnp.broadcast_to(pk[-1:], (pad,))])
+                px = jax.tree.map(
+                    lambda a_: jnp.concatenate(
+                        [a_, jnp.broadcast_to(a_[-1:], (pad,) + a_.shape[1:])], 0
+                    ),
+                    px,
+                )
+                if pt is not None:
+                    pt = jnp.concatenate(
+                        [pt, jnp.broadcast_to(pt[-1:], (pad,))]
+                    )
+                mask = jnp.arange(self.chunk) < (hi - lo)
+                state, y, _ = self.process_chunk(state, pk, px, pt, mask)
+                y = jax.tree.map(lambda a_: a_[: hi - lo], y)
+            else:
+                state, y, _ = self.process_chunk(state, pk, px, pt)
+            ys.append(y)
+        return state, jax.tree.map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *ys
+        )
+
+
+# ---------------------------------------------------------------------------
+# Device sharding of the key space
+# ---------------------------------------------------------------------------
+
+
+def shard_of_key(keys, n_shards: int):
+    """Key → shard assignment by hash (a different hash stream than the
+    directory's probe hash, so shard skew does not correlate with probe
+    clustering)."""
+    return (_hash_u32(jnp.asarray(keys, jnp.int32), 3) % jnp.uint32(n_shards)).astype(
+        jnp.int32
+    )
+
+
+class ShardedKeyedStore:
+    """Key-space sharding of a :class:`KeyedWindowStore` over a mesh axis.
+
+    Every shard owns ``slots`` slots and a private directory; a chunk is
+    broadcast to all shards and each masks it down to its own rows
+    (``hash(key) % shards == shard_index``) — the steady state runs ZERO
+    collectives (no gathers, no psums: outputs and state stay shard-local,
+    stacked on the leading axis).  Partition specs come from
+    :func:`repro.distributed.sharding.keyed_store_pspecs`.
+
+    Usage::
+
+        mesh = jax.make_mesh((R,), ("data",))
+        sh = ShardedKeyedStore(monoid, window, slots_per_shard, mesh, "data")
+        state = sh.init_state()                       # (R, ...)-stacked
+        state, ys, owner = sh.update_chunk(state, keys, xs)
+        y = ShardedKeyedStore.collect(ys, owner)      # host-side select
+    """
+
+    def __init__(
+        self,
+        monoid: Monoid,
+        window: int,
+        slots_per_shard: int,
+        mesh,
+        axis: str = "data",
+        **store_kwargs,
+    ):
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.distributed.sharding import keyed_store_pspecs
+
+        self.store = KeyedWindowStore(monoid, window, slots_per_shard, **store_kwargs)
+        self.mesh = mesh
+        self.axis = axis
+        self.n_shards = mesh.shape[axis]
+        self._pspecs = keyed_store_pspecs
+
+        # two entry points: with an explicit ts chunk, and without one — the
+        # latter must pass ts=None THROUGH to the store so each shard's internal
+        # tick drives recency (a constant ts would freeze last_used, making
+        # LRU degenerate and TTL evict actively-used keys)
+        def build(has_ts):
+            def local_update(st, keys, xs, *rest):
+                ts_row = rest[0] if has_ts else None
+                mask = rest[-1]
+                idx = jax.lax.axis_index(axis)
+                mine = mask & (shard_of_key(keys, self.n_shards) == idx)
+                st1 = jax.tree.map(lambda a_: a_[0], st)  # drop the shard axis
+                st2, ys, _info = self.store.update_chunk(
+                    st1, keys, xs, ts_row, mine
+                )
+                return (
+                    jax.tree.map(lambda a_: a_[None], st2),
+                    jax.tree.map(lambda a_: a_[None], ys),
+                )
+
+            def wrapped(st, keys, xs, *rest):
+                specs = jax.tree.map(lambda _: P(axis), st)
+                y_spec = jax.tree.map(
+                    lambda _: P(axis),
+                    jax.eval_shape(lambda x: jax.vmap(monoid.lift)(x), xs),
+                )
+                return shard_map(
+                    local_update,
+                    mesh=mesh,
+                    in_specs=(specs, P(), P()) + (P(),) * len(rest),
+                    out_specs=(specs, y_spec),
+                )(st, keys, xs, *rest)
+
+            return jax.jit(wrapped)
+
+        self._update_with_ts = build(True)
+        self._update_no_ts = build(False)
+
+    def init_state(self) -> PyTree:
+        from jax.sharding import NamedSharding
+
+        one = self.store.init_state()
+        stacked = jax.tree.map(
+            lambda a_: jnp.broadcast_to(a_, (self.n_shards,) + a_.shape).copy(),
+            one,
+        )
+        specs = self._pspecs(stacked, self.axis)
+        return jax.tree.map(
+            lambda a_, s: jax.device_put(a_, NamedSharding(self.mesh, s)),
+            stacked,
+            specs,
+        )
+
+    def update_chunk(self, state, keys, xs, ts=None, mask=None):
+        """Returns ``(state, ys, owner)``: ``ys`` is (shards, C, ...) with
+        row j meaningful only at ``ys[owner[j], j]``; everything else is the
+        identity.  ``owner`` is the (C,) shard assignment."""
+        keys = jnp.asarray(keys, jnp.int32)
+        C = int(keys.shape[0])
+        if mask is None:
+            mask = jnp.ones((C,), bool)
+        if ts is None:
+            state, ys = self._update_no_ts(state, keys, xs, mask)
+        else:
+            ts_row = jnp.broadcast_to(jnp.asarray(ts, jnp.float32), (C,))
+            state, ys = self._update_with_ts(state, keys, xs, ts_row, mask)
+        return state, ys, shard_of_key(keys, self.n_shards)
+
+    @staticmethod
+    def collect(ys: PyTree, owner) -> PyTree:
+        """Host-side compaction of sharded outputs: pick each row from its
+        owning shard (the one cross-shard data movement, OUTSIDE the steady
+        state)."""
+        owner = jnp.asarray(owner)
+        idx = jnp.arange(owner.shape[0])
+        return jax.tree.map(lambda a_: a_[owner, idx], ys)

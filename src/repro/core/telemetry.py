@@ -58,12 +58,36 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.chunked import ChunkedStream
 from repro.core.event_time import EventTimeChunkedStream
 from repro.core.monoids import Monoid, product_monoid
 
 PyTree = Any
+
+
+def _adopt_state_dict(restored: PyTree, current: PyTree, hint: str) -> PyTree:
+    """Validate a restored telemetry state against the live one (tree
+    structure, then per-leaf shapes) and return it cast to the live dtypes.
+    ``hint`` names the configuration knobs to check on mismatch."""
+    if jax.tree.structure(restored) != jax.tree.structure(current):
+        raise ValueError(
+            f"telemetry state_dict structure mismatch — configure the "
+            f"instance ({hint}) like the saved one"
+        )
+    for new, old in zip(jax.tree.leaves(restored), jax.tree.leaves(current)):
+        if jnp.shape(new) != jnp.shape(old):
+            raise ValueError(
+                f"telemetry state_dict shape mismatch ({jnp.shape(new)} vs "
+                f"{jnp.shape(old)}) — the saved {hint} differs from this "
+                f"instance's configuration"
+            )
+    return jax.tree.map(
+        lambda new, old: jnp.asarray(new, jnp.asarray(old).dtype),
+        restored,
+        current,
+    )
 
 
 class WindowedTelemetry:
@@ -262,23 +286,8 @@ class WindowedTelemetry:
         default-``ts`` observation lands just after the restored watermark
         (a fresh anchor starting at 0 would make every new observation
         "late" against the old watermark and silently dropped)."""
-        restored = sd["state"]
-        if jax.tree.structure(restored) != jax.tree.structure(self._state):
-            raise ValueError(
-                "telemetry state_dict structure mismatch — configure the "
-                "instance (metrics/window/horizon/batch) like the saved one"
-            )
-        for new, old in zip(jax.tree.leaves(restored), jax.tree.leaves(self._state)):
-            if jnp.shape(new) != jnp.shape(old):
-                raise ValueError(
-                    f"telemetry state_dict shape mismatch ({jnp.shape(new)} vs "
-                    f"{jnp.shape(old)}) — the saved window/capacity/batch "
-                    f"differs from this instance's configuration"
-                )
-        self._state = jax.tree.map(
-            lambda new, old: jnp.asarray(new, jnp.asarray(old).dtype),
-            restored,
-            self._state,
+        self._state = _adopt_state_dict(
+            sd["state"], self._state, "metrics/window/horizon/capacity/batch"
         )
         self._lowered = self.read(self._state)
         if self.horizon is not None:
@@ -293,6 +302,23 @@ class WindowedTelemetry:
         tmin = float(jax.device_get(self._engine._tmin))
         mx = float(self._state["eng"]["max_ts"])
         return 0.0 if mx <= tmin else mx
+
+    # -- keyed (multi-tenant) view ------------------------------------------
+
+    @staticmethod
+    def keyed(
+        metrics: Dict[str, Monoid],
+        window: int,
+        slots: int,
+        **kwargs,
+    ) -> "KeyedTelemetry":
+        """Per-key windowed telemetry: the same N-metrics-one-product-monoid
+        design, but each KEY (user, request, tenant) gets its own
+        independent count window, backed by
+        :class:`repro.core.keyed.KeyedWindowStore` (bounded hot set with
+        LRU/TTL eviction over an unbounded key universe).  See
+        :class:`KeyedTelemetry`."""
+        return KeyedTelemetry(metrics, window, slots, **kwargs)
 
     # -- impl ---------------------------------------------------------------
 
@@ -348,3 +374,125 @@ class WindowedTelemetry:
             return leaf
 
         return {k: jax.tree.map(bc, chunks[k]) for k in self.metrics}
+
+
+class KeyedTelemetry:
+    """Per-key windowed metrics over an unbounded key universe.
+
+    N named monoids live in ONE product-monoid element per key, and the
+    per-key count windows are lanes of a
+    :class:`repro.core.keyed.KeyedWindowStore`: a mixed-key observation
+    chunk is one fused jitted dispatch (sort → segments → directory
+    admission → bulk window update), the hot set is bounded by ``slots``
+    (LRU eviction, optional idle-key ``ttl``), and the whole thing is a
+    plain pytree for the checkpoint layer (:meth:`state_dict` /
+    :meth:`load_state_dict`).
+
+    Args:
+      metrics: name → :class:`Monoid` (window applies per key, uniformly).
+      window: count window length per key.
+      slots: hot-set bound (keys live concurrently; LRU beyond that).
+      ttl: optional idle eviction, in units of the ``ts`` passed to observe.
+      prepare: optional traced map from raw per-row input to the per-metric
+        value dict, fused into the dispatch.
+      chunk: default bulk chunk length (ragged chunks pad to it).
+    """
+
+    def __init__(
+        self,
+        metrics: Dict[str, Monoid],
+        window: int,
+        slots: int,
+        *,
+        ttl: Optional[float] = None,
+        prepare: Optional[Callable] = None,
+        chunk: int = 256,
+    ):
+        from repro.core.keyed import KeyedChunkedStream
+
+        self.metrics = dict(metrics)
+        self.monoid = product_monoid(self.metrics)
+        self.prepare = prepare
+        self.window = int(window)
+        self.slots = int(slots)
+        self._engine = KeyedChunkedStream(
+            self.monoid, self.window, self.slots, chunk, ttl=ttl
+        )
+        self._state = self._engine.init_state()
+        self._query_jit = jax.jit(self._engine.store.query)
+
+    # -- observation --------------------------------------------------------
+
+    def observe_bulk(self, keys, values, ts=None, mask=None) -> None:
+        """One chunk of mixed-key observations: ``keys`` (C,) int32 ≥ 0,
+        ``values`` a per-metric dict of (C,) leaves (or raw input when
+        ``prepare`` is set) — ONE fused dispatch, no host sync."""
+        if self.prepare is not None:
+            values = self.prepare(values)
+        vals = {k: values[k] for k in self.metrics}
+        self._state, _, _ = self._engine.process_chunk(
+            self._state, jnp.asarray(keys, jnp.int32), vals, ts, mask
+        )
+
+    def observe(self, key, values, ts=None) -> None:
+        """Single-key convenience wrapper (a C=1 chunk)."""
+        one = jax.tree.map(lambda v: jnp.asarray(v)[None], values)
+        self.observe_bulk(jnp.asarray([key], jnp.int32), one, ts)
+
+    # -- reads --------------------------------------------------------------
+
+    def snapshot(self, keys) -> dict:
+        """Lowered windowed metrics for ``keys`` in ONE transfer:
+        ``{"found": (K,) bool, <metric>: (K,) lowered}`` (identity-lowered
+        values for unknown keys).  Queries are padded to power-of-two
+        batches with the -1 sentinel (never found), so a polling caller
+        whose key count drifts reuses O(log) compilations instead of one
+        per distinct length."""
+        keys = jnp.asarray(keys, jnp.int32)
+        n = int(keys.shape[0])
+        cap = 1
+        while cap < n:
+            cap *= 2
+        if cap > n:
+            keys = jnp.concatenate(
+                [keys, jnp.full((cap - n,), -1, jnp.int32)]
+            )
+        aggs, found = self._query_jit(self._state, keys)
+        out = {k: m.lower(aggs[k]) for k, m in self.metrics.items()}
+        host = jax.device_get({"found": found, **out})
+        return jax.tree.map(lambda a: a[:n], host)
+
+    def aggregate(self, key, name: str) -> PyTree:
+        """Raw windowed Agg of one metric for one key (device value)."""
+        aggs, _ = self._query_jit(
+            self._state, jnp.asarray([key], jnp.int32)
+        )
+        return jax.tree.map(lambda a: a[0], aggs[name])
+
+    def live_keys(self) -> np.ndarray:
+        """The keys currently holding a slot (host transfer, unordered)."""
+        sk = np.asarray(self._state["dir"]["slot_key"])
+        return sk[sk >= 0]
+
+    def counters(self) -> dict:
+        """Host snapshot of the admission counters (live/evicted/failed
+        keys, dropped rows)."""
+        d = self._state["dir"]
+        return {
+            "n_live": int(d["n_live"]),
+            "n_evicted": int(d["n_evicted"]),
+            "n_failed": int(d["n_failed"]),
+            "n_dropped": int(self._state["n_dropped"]),
+        }
+
+    # -- checkpoint/restore -------------------------------------------------
+
+    def state_dict(self) -> PyTree:
+        """The full keyed window state (store lanes + key directory) as a
+        plain pytree for :mod:`repro.train.checkpoint`."""
+        return {"keyed": self._state}
+
+    def load_state_dict(self, sd: PyTree) -> None:
+        self._state = _adopt_state_dict(
+            sd["keyed"], self._state, "metrics/window/slots"
+        )

@@ -7,7 +7,10 @@ checkpoint-restart fault tolerance (no shuffle-buffer state to persist).
 ``DisorderedEventStream`` emits timestamped values in a configurably
 out-of-order arrival sequence with bounded lateness — the feed for the
 event-time windowing engine (:mod:`repro.core.event_time`) and its
-equivalence tests/benchmarks.
+equivalence tests/benchmarks.  ``KeyedEventStream`` adds the key dimension:
+Zipf-distributed tenant ids over a configurable universe with the same
+bounded-disorder arrival model — the feed for the keyed window store
+(:mod:`repro.core.keyed`).
 
 ``WindowedStreamStats`` runs the paper's aggregators over the live stream:
 Bloom-filter windowed dedup (non-invertible OR monoid) and min/max/mean
@@ -136,6 +139,80 @@ class DisorderedEventStream:
         ts, _, order = self._event_order()
         arr = ts[order]
         return float(np.max(np.maximum.accumulate(arr) - arr))
+
+
+class KeyedEventStream:
+    """Deterministic multi-tenant event stream: Zipf keys, bounded disorder.
+
+    Every event is ``(key, ts, x)``: keys are Zipf-distributed over a
+    ``universe`` of int32 ids (a few hot tenants, a long cold tail — the
+    realistic per-user skew for the keyed window store), event times are a
+    Poisson-ish arrival process, and the arrival order perturbs event order
+    with the same bounded-lateness construction as
+    :class:`DisorderedEventStream` (every element ≤ ``slack`` late).  Pure
+    function of the seed: a restarted consumer replays the identical
+    sequence.
+
+    The feed for :class:`repro.core.keyed.KeyedChunkedStream` equivalence
+    tests and ``benchmarks/bench_keyed.py``.
+    """
+
+    def __init__(
+        self,
+        n: int,
+        universe: int,
+        *,
+        zipf_a: float = 1.2,
+        mean_gap: float = 1.0,
+        disorder: float = 0.0,
+        slack: float = 8.0,
+        integer_values: bool = True,
+        seed: int = 0,
+    ):
+        self.n = int(n)
+        self.universe = int(universe)
+        self.zipf_a = float(zipf_a)
+        self.mean_gap = float(mean_gap)
+        self.disorder = float(disorder)
+        self.slack = float(slack)
+        self.integer_values = integer_values
+        self.seed = seed
+
+    def _event_order(self):
+        rng = np.random.default_rng((self.seed, 77))
+        z = rng.zipf(self.zipf_a, self.n).astype(np.int64)
+        # shuffle the Zipf ranks over the id space so hot keys are spread out
+        perm = np.random.default_rng((self.seed, 78)).permutation(self.universe)
+        keys = perm[(z % self.universe)].astype(np.int32)
+        ts = np.cumsum(rng.exponential(self.mean_gap, self.n)).astype(np.float32)
+        if self.integer_values:
+            xs = rng.integers(-9, 9, self.n).astype(np.int32)
+        else:
+            xs = rng.standard_normal(self.n).astype(np.float32)
+        delay = (rng.random(self.n) < self.disorder) * rng.uniform(
+            0.0, self.slack, self.n
+        )
+        return keys, ts, xs, np.argsort(ts + delay, kind="stable")
+
+    def arrival(self):
+        """``(keys, ts, xs)`` in ARRIVAL order — (n,) each."""
+        keys, ts, xs, order = self._event_order()
+        return (
+            jnp.asarray(keys[order]),
+            jnp.asarray(ts[order]),
+            jnp.asarray(xs[order]),
+        )
+
+    def in_order(self):
+        """``(keys, ts, xs)`` sorted by event time."""
+        keys, ts, xs, _ = self._event_order()
+        return jnp.asarray(keys), jnp.asarray(ts), jnp.asarray(xs)
+
+    def hot_keys(self, top: int = 10) -> np.ndarray:
+        """The ``top`` most frequent keys (host-side; for report/queries)."""
+        keys, _, _, _ = self._event_order()
+        uniq, counts = np.unique(keys, return_counts=True)
+        return uniq[np.argsort(-counts)][:top]
 
 
 class WindowedStreamStats:

@@ -27,6 +27,7 @@ from __future__ import annotations
 from typing import Any
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.common import ModelConfig
@@ -244,6 +245,22 @@ def token_pspec(mesh, batch: int) -> P:
     for a in dp:
         dp_size *= mesh.shape[a]
     return P(dp) if dp_size > 1 and batch % dp_size == 0 else P()
+
+
+def keyed_store_pspecs(state: PyTree, axis: str = "data") -> PyTree:
+    """PartitionSpecs for a shard-stacked keyed window store
+    (:class:`repro.core.keyed.ShardedKeyedStore`).
+
+    Every leaf of the stacked state — carry lanes, ``last`` aggregates,
+    directory tables, counters — carries a leading shard axis (one keyed
+    store per shard), sharded over ``axis``; all trailing dims stay local.
+    The key space is hash-partitioned onto the same axis, so the steady
+    state needs no collectives: each shard's slots, probes, and carries are
+    touched only by its own keys.
+    """
+    return jax.tree.map(
+        lambda leaf: P(axis, *(None,) * (jnp.ndim(leaf) - 1)), state
+    )
 
 
 def make_shardings(mesh, pspecs: PyTree) -> PyTree:

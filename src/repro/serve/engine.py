@@ -21,6 +21,14 @@ when latency is most interesting, whereas the horizon window keeps
 measuring the same span of real time.  Telemetry survives restarts via
 :meth:`DecodeEngine.save_telemetry` / :meth:`DecodeEngine.restore_telemetry`
 (the checkpoint layer of :mod:`repro.train.checkpoint`).
+
+Per-REQUEST windows ride on the keyed store
+(:class:`repro.core.telemetry.KeyedTelemetry` over
+:mod:`repro.core.keyed`): each engine step issues one fused mixed-key
+dispatch observing every active slot under its request id, so
+:meth:`DecodeEngine.request_telemetry` serves per-request decode-latency
+and token-throughput windows for an unbounded id space with a bounded
+(LRU-evicted) hot set.
 """
 
 from __future__ import annotations
@@ -33,7 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.monoids import kll_monoid, max_monoid, mean_monoid
+from repro.core.monoids import count_monoid, kll_monoid, max_monoid, mean_monoid
 from repro.core.telemetry import WindowedTelemetry
 from repro.models.common import ModelConfig
 from repro.models.transformer import DecodeSpec, build_model
@@ -59,6 +67,7 @@ class DecodeEngine:
         cache_len: int,
         telemetry_window: int = 128,
         telemetry_horizon: Optional[float] = 30.0,
+        request_telemetry_slots: Optional[int] = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -95,6 +104,22 @@ class DecodeEngine:
                 batch=batch_slots,
             )
         self._telem_t0 = time.perf_counter()  # float32-safe ts anchor
+        # per-REQUEST-key windows on the keyed store: decode latency and
+        # token throughput per request id, over the last telemetry_window
+        # steps OF THAT REQUEST.  Slots bound the hot set (finished
+        # requests age out via LRU) while request ids grow without bound.
+        if request_telemetry_slots is None:
+            request_telemetry_slots = max(4 * batch_slots, 64)
+        self._keyed_telem = WindowedTelemetry.keyed(
+            {
+                "decode_ms": mean_monoid(),
+                "tokens": count_monoid(),
+                "decode_ms_max": max_monoid(),
+            },
+            window=telemetry_window,
+            slots=request_telemetry_slots,
+            chunk=batch_slots,
+        )
         self.model = build_model(cfg)
         self.spec = DecodeSpec(
             cache_len=cache_len,
@@ -160,6 +185,7 @@ class DecodeEngine:
         self.cur_tok = nxt
         nxt_np = np.asarray(nxt)  # host sync: the decode step is complete
         decode_ms = (time.perf_counter() - t0) * 1e3
+        rid_by_slot = {i: self.slot_req[i].rid for i in active}
         retired_mask = np.zeros(self.B, np.float32)
         for i in active:
             req = self.slot_req[i]
@@ -174,6 +200,7 @@ class DecodeEngine:
         active_mask = np.zeros(self.B, np.float32)
         active_mask[active] = 1.0
         # event time = wall-clock completion of this decode step
+        now = time.perf_counter() - self._telem_t0
         self._telem.observe(
             {
                 "active": jnp.asarray(active_mask),
@@ -182,7 +209,24 @@ class DecodeEngine:
                 "decode_ms_max": jnp.float32(decode_ms),
                 "decode_ms_q": jnp.float32(decode_ms),
             },
-            ts=time.perf_counter() - self._telem_t0,
+            ts=now,
+        )
+        # per-request keyed windows: one fused mixed-key dispatch (slot i's
+        # row is keyed by its request id; free slots are masked out).
+        # note `active` still reflects the slots that decoded THIS step —
+        # retirement above only cleared slot_req for the next step.
+        rids = np.zeros(self.B, np.int32)
+        for i in active:
+            rids[i] = rid_by_slot[i]
+        self._keyed_telem.observe_bulk(
+            jnp.asarray(rids),
+            {
+                "decode_ms": jnp.full((self.B,), decode_ms, jnp.float32),
+                "tokens": jnp.zeros((self.B,), jnp.int32),  # count lifts to 1
+                "decode_ms_max": jnp.full((self.B,), decode_ms, jnp.float32),
+            },
+            ts=now,
+            mask=jnp.asarray(active_mask > 0),
         )
         return len(active)
 
@@ -220,23 +264,56 @@ class DecodeEngine:
             "telemetry_overflow": self._telem.overflow_count(),
         }
 
+    def request_telemetry(self, rids=None) -> dict:
+        """Per-REQUEST windowed stats from the keyed store: decode-latency
+        mean/max and decoded-token count over each request's own last
+        ``telemetry_window`` steps.  ``rids`` defaults to every request id
+        still holding a store slot (finished requests age out via LRU).
+        Returns ``{rid: {"decode_ms_mean", "decode_ms_max", "tokens"}}``
+        plus the store's admission counters under ``"_counters"``."""
+        if rids is None:
+            rids = sorted(int(k) for k in self._keyed_telem.live_keys())
+        rids = list(rids)
+        out = {"_counters": self._keyed_telem.counters()}
+        if not rids:
+            return out
+        s = self._keyed_telem.snapshot(np.asarray(rids, np.int32))
+        for j, rid in enumerate(rids):
+            if bool(s["found"][j]):
+                out[rid] = {
+                    "decode_ms_mean": float(s["decode_ms"][j]),
+                    "decode_ms_max": float(s["decode_ms_max"][j]),
+                    "tokens": int(s["tokens"][j]),
+                }
+        return out
+
     # -- telemetry checkpoint/restore --------------------------------------
 
     def save_telemetry(self, directory: str, step: int) -> str:
-        """Checkpoint the windowed serve telemetry (atomic, see
+        """Checkpoint the windowed serve telemetry — the global event-time
+        window AND the per-request keyed store (atomic, see
         :mod:`repro.train.checkpoint`); returns the checkpoint path."""
-        return checkpoint.save(self._telem.state_dict(), directory, step)
+        payload = {
+            "telem": self._telem.state_dict(),
+            "keyed": self._keyed_telem.state_dict(),
+        }
+        return checkpoint.save(payload, directory, step)
 
     def restore_telemetry(self, directory: str, step: Optional[int] = None) -> int:
         """Restore telemetry saved by :meth:`save_telemetry` (latest step if
-        unspecified) — serve windows survive an engine restart.  Returns the
-        restored step."""
+        unspecified) — the global and per-request windows both survive an
+        engine restart.  Returns the restored step."""
         if step is None:
             step = checkpoint.latest_step(directory)
             if step is None:
                 raise FileNotFoundError(f"no telemetry checkpoint under {directory}")
-        sd = checkpoint.restore(directory, step, like=self._telem.state_dict())
-        self._telem.load_state_dict(sd)
+        like = {
+            "telem": self._telem.state_dict(),
+            "keyed": self._keyed_telem.state_dict(),
+        }
+        sd = checkpoint.restore(directory, step, like=like)
+        self._telem.load_state_dict(sd["telem"])
+        self._keyed_telem.load_state_dict(sd["keyed"])
         # continue the anchored serve clock from the restored watermark so
         # post-restore steps are not "late" against the saved window
         self._telem_t0 = time.perf_counter() - self._telem.last_timestamp()

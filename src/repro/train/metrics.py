@@ -38,10 +38,11 @@ _TIME_IDENT = float(jnp.finfo(jnp.float32).min)  # identity of the max monoid
 
 
 @functools.lru_cache(maxsize=None)
-def _telemetry(window: int) -> WindowedTelemetry:
-    return WindowedTelemetry(
-        {"loss": _LOSS_M, "gnorm": _GNORM_M, "step_time": _TIME_M}, window
-    )
+def _telemetry(window, horizon=None) -> WindowedTelemetry:
+    metrics = {"loss": _LOSS_M, "gnorm": _GNORM_M, "step_time": _TIME_M}
+    if horizon is not None:
+        return WindowedTelemetry(metrics, horizon=float(horizon))
+    return WindowedTelemetry(metrics, int(window))
 
 
 def _window_of(mw: PyTree) -> int:
@@ -51,17 +52,34 @@ def _window_of(mw: PyTree) -> int:
     return jax.tree.leaves(mw["carry"])[0].shape[0] + 1
 
 
-def init_metric_windows(window: int) -> PyTree:
-    return _telemetry(int(window)).init_state()
+def init_metric_windows(window=None, *, horizon=None) -> PyTree:
+    """Metric-window state: ``window=N`` counts the last N steps;
+    ``horizon=H`` keeps every step whose timestamp lies in the last H
+    seconds (event time — under stragglers a count window silently
+    stretches its wall-clock coverage; a horizon window keeps measuring
+    the same real-time span).  Horizon mode threads a ``ts`` through
+    :func:`update_metric_windows` and passes the SAME ``horizon=`` there
+    (a float is not recoverable from state shapes, unlike the count
+    window)."""
+    return _telemetry(window, horizon).init_state()
 
 
-def update_metric_windows(mw: PyTree, loss, grad_norm, step_time=None) -> PyTree:
-    t = _telemetry(_window_of(mw))
+def update_metric_windows(
+    mw: PyTree, loss, grad_norm, step_time=None, *, ts=None, horizon=None
+) -> PyTree:
+    """One step's metrics into the window (pure; lives inside the jitted
+    train step).  Count mode recovers the window from the carry shapes;
+    event-time mode (``horizon=`` matching ``init_metric_windows``) needs
+    the step's timestamp ``ts`` (seconds, e.g. anchored perf_counter)."""
+    t = _telemetry(None if horizon is not None else _window_of(mw), horizon)
     if step_time is None:
         step_time = _TIME_IDENT  # identity: leaves the windowed max untouched
-    return t.update(
-        mw, {"loss": loss, "gnorm": grad_norm, "step_time": step_time}
-    )
+    values = {"loss": loss, "gnorm": grad_norm, "step_time": step_time}
+    if horizon is not None:
+        if ts is None:
+            raise ValueError("event-time metric windows need ts= per update")
+        return t.update(mw, values, ts)
+    return t.update(mw, values)
 
 
 def read_metric_windows(mw: PyTree) -> dict:
@@ -81,11 +99,23 @@ def read_metric_windows(mw: PyTree) -> dict:
 class TimeWindow:
     """Host-side (eager) sliding window over step durations for straggler
     detection — one jitted dispatch per observation via the telemetry layer
-    (variance monoid), so the watchdog itself never causes a latency spike."""
+    (variance monoid), so the watchdog itself never causes a latency spike.
 
-    def __init__(self, window: int = 64):
+    ``horizon=H`` switches to an event-time window over the last H seconds
+    of wall clock (observations stamped ``time.monotonic`` by the telemetry
+    layer): the straggler baseline then covers a fixed real-time span
+    instead of the last N steps — exactly when stragglers make step counts
+    and wall clock diverge."""
+
+    def __init__(self, window: int = 64, *, horizon=None):
         self.window = window
-        self.telem = WindowedTelemetry({"t": variance_monoid()}, window)
+        self.horizon = horizon
+        if horizon is not None:
+            self.telem = WindowedTelemetry(
+                {"t": variance_monoid()}, horizon=float(horizon)
+            )
+        else:
+            self.telem = WindowedTelemetry({"t": variance_monoid()}, window)
 
     def observe(self, seconds: float) -> dict:
         self.telem.observe({"t": jnp.float32(seconds)})

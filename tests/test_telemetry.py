@@ -298,3 +298,77 @@ def test_serve_engine_telemetry_surface(tmp_path):
     t1 = eng1.telemetry()
     assert t1["slot_occupancy"].shape == (1,)
     assert 0 < t1["decode_ms_p50"] <= t1["decode_ms_p99"]
+
+
+def test_metric_windows_horizon_mode():
+    """Event-time (`horizon=`) step metrics: only steps inside the last H
+    seconds survive, unlike the count window."""
+    from repro.train.metrics import (
+        init_metric_windows,
+        read_metric_windows,
+        update_metric_windows,
+    )
+
+    mw = init_metric_windows(horizon=10.0)
+    # 3 old steps at t=0..2, then 2 recent ones at t=20, 21
+    data = [(0.0, 5.0, 1.0), (1.0, 6.0, 1.0), (2.0, 7.0, 1.0),
+            (20.0, 2.0, 3.0), (21.0, 4.0, 3.0)]
+    for ts, loss, g in data:
+        mw = update_metric_windows(
+            mw, jnp.float32(loss), jnp.float32(g), ts=ts, horizon=10.0
+        )
+    out = read_metric_windows(mw)
+    # watermark 21 -> window (11, 21]: only the last two steps
+    assert int(out["win/steps"]) == 2
+    assert abs(float(out["win/loss_mean"]) - 3.0) < 1e-5
+    assert float(out["win/gnorm_max"]) == 3.0
+    assert int(out["win/gnorm_max_count"]) == 2
+    # ts is mandatory in horizon mode
+    with pytest.raises(ValueError):
+        update_metric_windows(mw, jnp.float32(0), jnp.float32(0), horizon=10.0)
+
+
+def test_time_window_horizon_straggler_baseline():
+    from repro.train.metrics import TimeWindow
+
+    tw = TimeWindow(horizon=60.0)
+    for _ in range(10):
+        stats = tw.observe(0.1)
+    assert stats["n"] == 10 and abs(stats["mean"] - 0.1) < 1e-6
+    assert not tw.is_straggler(0.1)
+
+
+def test_serve_engine_request_telemetry():
+    from repro.configs import ARCHS
+    from repro.models.factory import reduced_config
+    from repro.models.transformer import build_model
+    from repro.serve.engine import DecodeEngine, Request
+
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    params = build_model(cfg).init_params(jax.random.key(0))
+    eng = DecodeEngine(cfg, params, batch_slots=2, cache_len=32,
+                       telemetry_window=16)
+    prng = np.random.default_rng(0)
+    max_new = {7: 3, 8: 5, 9: 2}
+    for rid, n in max_new.items():
+        eng.submit(Request(rid=rid, prompt=prng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32), max_new=n))
+    eng.run_until_drained(max_steps=40)
+    rt = eng.request_telemetry()
+    # every request decoded max_new - 1 steps (prefill emits the first token)
+    for rid, n in max_new.items():
+        assert rid in rt, rt
+        assert rt[rid]["tokens"] == n - 1
+        assert rt[rid]["decode_ms_max"] >= rt[rid]["decode_ms_mean"] > 0
+    assert rt["_counters"]["n_dropped"] == 0
+    # the per-request keyed windows survive a save/restore round trip
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        eng.save_telemetry(d, step=3)
+        eng2 = DecodeEngine(cfg, params, batch_slots=2, cache_len=32,
+                            telemetry_window=16)
+        assert eng2.restore_telemetry(d) == 3
+    rt2 = eng2.request_telemetry()
+    for rid in max_new:
+        assert rt2[rid] == rt[rid]

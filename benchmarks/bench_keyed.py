@@ -8,13 +8,26 @@ Engines:
     DABA-Lite windows, one eager insert/evict/query dispatch per element
     (timed on a truncated stream and scaled; the per-item cost is constant);
   * ``bulk``: :class:`repro.core.keyed.KeyedChunkedStream` — stable sort by
-    key, segment boundaries, directory admission, and segment-wise carry
-    updates fused into ONE jitted dispatch per chunk.
+    key, segment boundaries, vectorized admission, and ONE batched carry
+    scatter fused into a single jitted dispatch per chunk.  Timed in the
+    WARM steady state: the key set is already admitted, the state is
+    threaded through repeats (donation keeps the carry scatter in-place),
+    and every chunk takes the all-hit admission fast path — the regime a
+    long-lived store lives in;
+  * ``bulk_cold``: the same stream into a FRESH state per repeat — every
+    chunk pays batched admission for its genuinely-new keys (cold-ingest
+    honesty row; compilation is excluded).
+
+Bulk rows carry ``roofline_frac``: measured items/s over the memory-bound
+items/s bound of :func:`repro.roofline.analysis.keyed_update_cost`.
 
 Sweeps K ∈ {256, 4k, 64k} × chunk sizes.  Rows use the repo CSV style::
 
-    keyed,sum,bulk,K=4096,window=256,chunk=4096,T=65536,items_per_s=...
-    keyed,sum,speedup,K=4096,window=256,x=...
+    keyed,sum,bulk,K=4096,window=256,chunk=4096,T=65536,items_per_s=...,roofline_frac=...
+    keyed,sum,speedup,K=4096,window=256,T=65536,x=...
+
+``tune()`` sweeps chunk sizes per (K, window) and emits the best
+configuration per combination (the ``--tune`` mode of benchmarks.run).
 """
 
 from __future__ import annotations
@@ -28,6 +41,7 @@ import numpy as np
 from repro.core import daba_lite, monoids
 from repro.core.keyed import KeyedChunkedStream
 from repro.data.stream import KeyedEventStream
+from repro.roofline.analysis import keyed_update_cost
 
 
 def _events(T, K, seed=0):
@@ -36,14 +50,31 @@ def _events(T, K, seed=0):
     return keys, xs
 
 
-def bulk_throughput(monoid, window, K, T, chunk, repeats=2):
+def bulk_throughput(monoid, window, K, T, chunk, repeats=3):
+    """Warm steady-state items/s: keys admitted, state threaded through
+    repeats, admission on the fast path, carry scatter in-place."""
     keys, xs = _events(T, K)
     eng = KeyedChunkedStream(monoid, window, slots=K, chunk=chunk)
-    st, ys = eng.stream(keys, xs)  # compile + warm
+    st, ys = eng.stream(keys, xs)  # compile + admit the key set
+    st, ys = eng.stream(keys, xs, state=st)  # settle into steady state
     jax.block_until_ready(ys)
     t0 = time.perf_counter()
     for _ in range(repeats):
-        st, ys = eng.stream(keys, xs)
+        st, ys = eng.stream(keys, xs, state=st)
+        jax.block_until_ready(ys)
+    return repeats * T / (time.perf_counter() - t0)
+
+
+def bulk_cold_throughput(monoid, window, K, T, chunk, repeats=2):
+    """Cold-ingest items/s: a fresh state per repeat, so chunks pay batched
+    admission for their new keys (compilation excluded via a warm-up pass)."""
+    keys, xs = _events(T, K)
+    eng = KeyedChunkedStream(monoid, window, slots=K, chunk=chunk)
+    _, ys = eng.stream(keys, xs)  # compile only
+    jax.block_until_ready(ys)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        _, ys = eng.stream(keys, xs)  # state=None → fresh init each time
         jax.block_until_ready(ys)
     return repeats * T / (time.perf_counter() - t0)
 
@@ -66,6 +97,11 @@ def per_key_loop_throughput(monoid, window, K, T):
         daba_lite.query(monoid, s)
         states[k] = s
     return T / (time.perf_counter() - t0)
+
+
+def _roofline_frac(thr, chunk, window):
+    bound = keyed_update_cost(chunk, window)["items_per_s_bound"]
+    return thr / bound if bound > 0 else 0.0
 
 
 def main(Ks=(256, 4096, 65536), window=256, chunks=(1024, 4096), T=65536,
@@ -92,11 +128,49 @@ def main(Ks=(256, 4096, 65536), window=256, chunks=(1024, 4096), T=65536,
             best = max(best, thr)
             emit(
                 f"keyed,sum,bulk,K={K},window={window},chunk={chunk},T={T},"
-                f"items_per_s={thr:.0f}"
+                f"items_per_s={thr:.0f},"
+                f"roofline_frac={_roofline_frac(thr, chunk, window):.3f}"
+            )
+            thr_cold = bulk_cold_throughput(monoid, window, K, T, chunk)
+            emit(
+                f"keyed,sum,bulk_cold,K={K},window={window},chunk={chunk},"
+                f"T={T},items_per_s={thr_cold:.0f}"
             )
         emit(
             f"keyed,sum,speedup,K={K},window={window},T={T},"
             f"x={best / thr_loop:.1f}"
+        )
+    return rows
+
+
+def tune(Ks=(256, 4096, 65536), window=256,
+         chunks=(256, 512, 1024, 2048, 4096, 8192), T=65536):
+    """Sweep chunk size per (backend, K, window); emit every point plus a
+    ``best`` row per K — the autotuner behind ``benchmarks.run --tune``."""
+    rows = []
+    monoid = monoids.sum_monoid(jnp.int32)
+    backend = jax.default_backend()
+
+    def emit(row):
+        rows.append(row)
+        print(row, flush=True)
+
+    for K in Ks:
+        best_thr, best_chunk = 0.0, None
+        for chunk in chunks:
+            if chunk > T:
+                continue
+            thr = bulk_throughput(monoid, window, K, T, chunk, repeats=2)
+            emit(
+                f"keyed,sum,tune,backend={backend},K={K},window={window},"
+                f"chunk={chunk},T={T},items_per_s={thr:.0f},"
+                f"roofline_frac={_roofline_frac(thr, chunk, window):.3f}"
+            )
+            if thr > best_thr:
+                best_thr, best_chunk = thr, chunk
+        emit(
+            f"keyed,sum,tune_best,backend={backend},K={K},window={window},"
+            f"T={T},best_chunk={best_chunk},items_per_s={best_thr:.0f}"
         )
     return rows
 

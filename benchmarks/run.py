@@ -21,6 +21,7 @@ import argparse
 import datetime
 import json
 import pathlib
+import sys
 
 
 def parse_rows(rows) -> list:
@@ -60,6 +61,59 @@ def emit_json(name: str, rows, out_dir: str = ".") -> pathlib.Path:
     return path
 
 
+# rows with these labels are informational, not regression-gated: the
+# per-key Python loop times host dict/dispatch overhead (noisy across
+# machines), speedup/tune rows carry no items_per_s of their own
+_COMPARE_SKIP_LABELS = {"per_key_loop", "speedup", "tune", "tune_best"}
+
+
+def _row_key(rec: dict):
+    """Identity of a benchmark row for --compare matching: its bare labels
+    plus every ``k=v`` parameter EXCEPT the measured outputs."""
+    drop = {"raw", "labels", "items_per_s", "x", "roofline_frac"}
+    params = tuple(sorted(
+        (k, v) for k, v in rec.items() if k not in drop
+    ))
+    return (tuple(rec.get("labels", ())), params)
+
+
+def compare_rows(current_rows, baseline_path: str, threshold: float) -> int:
+    """Diff current rows against a committed BENCH JSON: rows are matched
+    by labels+parameters and FAIL when ``items_per_s`` falls below
+    ``threshold ×`` the baseline.  Returns the number of failures (and
+    counts zero matched rows as a failure — a silently-empty gate guards
+    nothing)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    base = {}
+    for rec in baseline.get("rows", []):
+        if "items_per_s" not in rec:
+            continue
+        if _COMPARE_SKIP_LABELS & set(rec.get("labels", ())):
+            continue
+        base[_row_key(rec)] = rec["items_per_s"]
+    matched = failures = 0
+    for rec in parse_rows(current_rows):
+        key = _row_key(rec)
+        if key not in base or "items_per_s" not in rec:
+            continue
+        matched += 1
+        ratio = rec["items_per_s"] / base[key] if base[key] > 0 else 1.0
+        status = "OK" if ratio >= threshold else "REGRESSION"
+        if ratio < threshold:
+            failures += 1
+        print(
+            f"# compare {status}: {rec['raw']}  "
+            f"baseline={base[key]:.0f} ratio={ratio:.2f} "
+            f"(threshold {threshold})"
+        )
+    if matched == 0:
+        print(f"# compare FAILED: no rows matched {baseline_path}")
+        return 1
+    print(f"# compare: {matched} rows matched, {failures} regressions")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -70,15 +124,44 @@ def main() -> None:
                     help="directory for BENCH_<name>.json summaries")
     ap.add_argument("--no-json", action="store_true",
                     help="skip the JSON summaries")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune mode: sweep chunk size per (backend, K, "
+                         "window) for the keyed store and emit the best "
+                         "configuration (writes BENCH_keyed_tune.json)")
+    ap.add_argument("--compare", default=None, metavar="BASELINE.json",
+                    help="diff this run's rows against a committed BENCH "
+                         "JSON (matched by labels+params) and exit non-zero "
+                         "on items/s regressions; per_key_loop rows are "
+                         "informational and never gated")
+    ap.add_argument("--threshold", type=float, default=0.8,
+                    help="minimum current/baseline items_per_s ratio for "
+                         "--compare (default 0.8)")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
+    all_rows: list = []
 
     def on(name):
         return want is None or name in want
 
     def done(name, rows):
+        all_rows.extend(rows or [])
         if not args.no_json:
             emit_json(name, rows, args.out_dir)
+
+    if args.tune:
+        from benchmarks import bench_keyed
+
+        print("# autotune — keyed chunk sweep")
+        if args.quick:
+            rows = bench_keyed.tune(Ks=(256, 65536),
+                                    chunks=(512, 1024, 4096), T=16384)
+        else:
+            rows = bench_keyed.tune()
+        done("keyed_tune", rows)
+        if args.compare:
+            sys.exit(1 if compare_rows(rows, args.compare, args.threshold)
+                     else 0)
+        return
 
     from benchmarks import (
         bench_batched,
@@ -136,7 +219,9 @@ def main() -> None:
     if on("keyed"):
         print("# beyond-paper — keyed window store (per-key windows, bulk)")
         if args.quick:
-            rows = bench_keyed.main(Ks=(256, 4096), chunks=(1024,),
+            # K=64k rides along at reduced T so CI exercises the very
+            # cliff the fused hot path exists to kill
+            rows = bench_keyed.main(Ks=(256, 4096, 65536), chunks=(1024,),
                                     T=16384, loop_T=400)
         else:
             rows = bench_keyed.main()
@@ -145,6 +230,10 @@ def main() -> None:
         print("# §Roofline — dry-run derived table")
         rows = roofline_table.main()
         done("roofline", rows)
+
+    if args.compare:
+        sys.exit(1 if compare_rows(all_rows, args.compare, args.threshold)
+                 else 0)
 
 
 if __name__ == "__main__":

@@ -27,6 +27,27 @@ SWAG machinery:
     and one scatter of refreshed carries — instead of K tiny per-key
     updates (cf. the bulk-eviction direction of arXiv 2307.11210, extended
     across the key dimension).
+
+The hot-path anatomy keeps every per-dispatch cost proportional to the
+CHUNK, never to the slot pool:
+
+  1. stable sort by key → segments (O(C log C));
+  2. admission (:meth:`KeyDirectory.admit_heads`): ONE vectorized lookup of
+     the segment-head keys; a ``lax.cond`` takes the all-hit branch (just a
+     recency-bump scatter) when the chunk introduces no new keys, else a
+     round-based *batched* admission that inserts every genuinely-new head
+     per round with scatter-min conflict resolution — sequential only in
+     the (few) probe-conflict rounds, not per key;
+  3. per-row outputs from intra-chunk range folds + a warm-prefix gather of
+     (C, h) carry lanes — reclaimed slots are masked to the identity at the
+     GATHER (never a full-(slots, h) reset pass);
+  4. refreshed carries from one segmented suffix scan
+     (:func:`seg_suffix_scan`, or the fused ``kernels/seg_scan`` Pallas
+     kernel for scalar monoids on TPU) and ONE batched (C, h) scatter.
+
+:class:`KeyedChunkedStream` donates the state buffers into the jitted
+update, so that scatter is in-place — per-chunk work stays O(C·h) while
+the resident state is O(slots·h).
   * :class:`KeyedChunkedStream` — the chunk-at-a-time driver (jit cache,
     ragged final chunk padding) mirroring
     :class:`repro.core.chunked.ChunkedStream`.
@@ -59,6 +80,22 @@ PyTree = Any
 EMPTY = jnp.int32(-1)  # free table entry / free slot
 DELETED = jnp.int32(-2)  # tombstone: probes continue through it
 _KEY_SENTINEL = jnp.int32(2**31 - 1)  # masked rows sort last
+
+
+# Host-side admission-branch counters (filled only by stores built with
+# ``instrument_admission=True`` — a jax.debug.callback in each branch of the
+# admission cond, so tests can assert the hit branch was actually taken at
+# runtime).  Call jax.effects_barrier() before reading.
+ADMISSION_COUNTS = {"fast": 0, "slow": 0}
+
+
+def reset_admission_counts() -> None:
+    ADMISSION_COUNTS["fast"] = 0
+    ADMISSION_COUNTS["slow"] = 0
+
+
+def _count_admission(branch: str) -> None:
+    ADMISSION_COUNTS[branch] += 1
 
 
 def _bc(mask, leaf):
@@ -242,6 +279,144 @@ class KeyDirectory:
 
         return jax.lax.cond(found, on_found, on_miss, state, touched)
 
+    def admit_heads(self, state: PyTree, keys, tss, head_mask, *,
+                    instrument: bool = False):
+        """Chunk-wide find-or-allocate for the segment-head keys (the bulk
+        counterpart of :meth:`admit_row`); returns ``(state, slots, new)``
+        with (C,) per-row slots (-1 off-head / failed) and new-key flags.
+
+        ONE vectorized lookup resolves every already-admitted head; a
+        ``lax.cond`` then skips allocation entirely when the chunk has no
+        new keys (the steady-state fast path is a single recency-bump
+        scatter).  Otherwise the genuinely-new heads are admitted in
+        *batched rounds*: each round probes all pending keys at once,
+        resolves probe-cell conflicts by scatter-min (lowest head index
+        wins a cell), assigns winners consecutive slots from a candidate
+        list precomputed ONCE (free slots in index order, then evictable
+        slots in LRU order — never a slot held by a key of this chunk), and
+        tombstones + inserts them in bulk.  Every round admits at least one
+        pending head, so the while_loop runs O(probe-conflict chain) rounds
+        of O(C · probes) vector work — not one sequential step per key.
+
+        Heads whose probe window is full, or that arrive after the
+        free+evictable budget is spent, fail safely (slot -1,
+        ``n_failed``); which head pays for capacity exhaustion can differ
+        from :meth:`admit_row`'s strict one-at-a-time order under probe
+        conflicts, but the outcome is deterministic.
+        """
+        S, size, P = self.slots, self.size, self.probes
+        keys = jnp.asarray(keys, jnp.int32)
+        tss = jnp.asarray(tss, jnp.float32)
+        head_mask = jnp.asarray(head_mask, bool)
+        C = int(keys.shape[0])
+        idx_c = jnp.arange(C, dtype=jnp.int32)
+
+        slot0, found = self.lookup(state, jnp.where(head_mask, keys, EMPTY))
+        found_scat = jnp.where(found, slot0, S)
+        # recency bump for every already-admitted head (one scatter)
+        state = dict(
+            state,
+            last_used=state["last_used"].at[found_scat].set(tss, mode="drop"),
+        )
+        pending0 = head_mask & ~found
+
+        def hits_only(st):
+            if instrument:
+                jax.debug.callback(_count_admission, "fast")
+            return st, slot0, jnp.zeros((C,), bool)
+
+        def with_admission(st):
+            if instrument:
+                jax.debug.callback(_count_admission, "slow")
+            touched = jnp.zeros((S,), bool).at[found_scat].set(
+                True, mode="drop"
+            )
+            live = st["slot_key"] != EMPTY
+            free_slots = ~live
+            evictable = live & ~touched & jnp.isfinite(st["last_used"])
+            klass = jnp.where(
+                free_slots, 0, jnp.where(evictable, 1, 2)
+            ).astype(jnp.int32)
+            order_key = jnp.where(
+                free_slots,
+                jnp.arange(S, dtype=jnp.float32),
+                st["last_used"],
+            )
+            cand = jnp.lexsort((order_key, klass)).astype(jnp.int32)
+            n_avail = (klass < 2).sum(dtype=jnp.int32)
+            n_free0 = free_slots.sum(dtype=jnp.int32)
+            pos_all = jax.vmap(self._probe_pos)(keys)  # (C, P)
+
+            def round_body(carry):
+                st, pending, slots, new, consumed = carry
+                tk = st["table_key"][pos_all]
+                empty = tk == EMPTY
+                free = empty | (tk == DELETED)
+                has_cell = free.any(axis=1)
+                ins_j = jnp.argmax(free, axis=1)
+                ins_pos = jnp.take_along_axis(
+                    pos_all, ins_j[:, None], axis=1
+                )[:, 0]
+                ins_ok = pending & has_cell
+                fail_now = pending & ~has_cell
+                # conflict resolution: lowest head index wins each cell
+                claims = jnp.full((size,), C, jnp.int32).at[
+                    jnp.where(ins_ok, ins_pos, size)
+                ].min(idx_c, mode="drop")
+                win = ins_ok & (claims[ins_pos] == idx_c)
+                rank = jnp.cumsum(win.astype(jnp.int32)) - 1
+                cand_idx = consumed + jnp.where(win, rank, 0)
+                alloc_ok = win & (cand_idx < n_avail)
+                cap_fail = win & ~(cand_idx < n_avail)
+                slot = cand[jnp.clip(cand_idx, 0, S - 1)]
+                evicting = alloc_ok & (cand_idx >= n_free0)
+                # tombstone the evicted tenants' table entries (each live
+                # key holds exactly one entry, so victim writes never clash)
+                old_key = st["slot_key"][slot]
+                vpos = jax.vmap(self._probe_pos)(old_key)
+                vtk = st["table_key"][vpos]
+                vempty = vtk == EMPTY
+                vbefore = jnp.cumsum(vempty.astype(jnp.int32), axis=1) - vempty
+                vhit = (vtk == old_key[:, None]) & (vbefore == 0)
+                vdst = jnp.where(
+                    evicting & vhit.any(axis=1),
+                    jnp.take_along_axis(
+                        vpos, jnp.argmax(vhit, axis=1)[:, None], axis=1
+                    )[:, 0],
+                    size,
+                )
+                table_key = st["table_key"].at[vdst].set(DELETED, mode="drop")
+                wdst = jnp.where(alloc_ok, ins_pos, size)
+                sdst = jnp.where(alloc_ok, slot, S)
+                st = dict(
+                    st,
+                    table_key=table_key.at[wdst].set(keys, mode="drop"),
+                    table_slot=st["table_slot"].at[wdst].set(slot, mode="drop"),
+                    slot_key=st["slot_key"].at[sdst].set(keys, mode="drop"),
+                    last_used=st["last_used"].at[sdst].set(tss, mode="drop"),
+                    n_live=st["n_live"]
+                    + (alloc_ok & ~evicting).sum(dtype=jnp.int32),
+                    n_evicted=st["n_evicted"] + evicting.sum(dtype=jnp.int32),
+                    n_failed=st["n_failed"]
+                    + (fail_now | cap_fail).sum(dtype=jnp.int32),
+                )
+                return (
+                    st,
+                    pending & ~(alloc_ok | fail_now | cap_fail),
+                    jnp.where(alloc_ok, slot, slots),
+                    new | alloc_ok,
+                    consumed + alloc_ok.sum(dtype=jnp.int32),
+                )
+
+            st, _, slots, new, _ = jax.lax.while_loop(
+                lambda c: c[1].any(),
+                round_body,
+                (st, pending0, slot0, jnp.zeros((C,), bool), jnp.int32(0)),
+            )
+            return st, slots, new
+
+        return jax.lax.cond(pending0.any(), with_admission, hits_only, state)
+
     def expire(self, state: PyTree, now, ttl) -> tuple:
         """Free every slot idle longer than ``ttl``; returns
         ``(state, expired)`` with the (slots,) expiry mask (vectorized)."""
@@ -295,6 +470,8 @@ class KeyedWindowStore:
         probes: int = 32,
         ttl: Optional[float] = None,
         use_inverse: Optional[bool] = None,
+        use_seg_kernel: Optional[bool] = None,
+        instrument_admission: bool = False,
     ):
         self.monoid = monoid
         self.window = int(window)
@@ -307,6 +484,37 @@ class KeyedWindowStore:
         if use_inverse is None:
             use_inverse = monoid.invertible and monoid.commutative
         self._range_fold = range_fold_invertible if use_inverse else range_fold
+        # seg_scan Pallas kernel: None = auto (scalar-monoid gate AND TPU
+        # backend), True = force (raises for unsupported monoids), False =
+        # always the lax associative_scan path.
+        self.use_seg_kernel = use_seg_kernel
+        self.instrument_admission = bool(instrument_admission)
+
+    def _seg_scan(self, end_flags, lifted: PyTree) -> PyTree:
+        """Segmented suffix scan over the sorted chunk — the fused
+        ``kernels/seg_scan`` Pallas kernel when the monoid passes the
+        scalar-monoid structural gate (auto: only on TPU; ``interpret``
+        under the kernel keeps CPU tests exact), else the generic
+        :func:`seg_suffix_scan` lax fallback."""
+        use = self.use_seg_kernel
+        if use is None or use:
+            from repro.kernels.ops_registry import op_for_monoid
+
+            op = op_for_monoid(self.monoid)
+            if use is None:
+                use = op is not None and jax.default_backend() == "tpu"
+            elif op is None:
+                raise ValueError(
+                    "use_seg_kernel=True needs a scalar-op monoid "
+                    f"(got {getattr(self.monoid, 'name', self.monoid)!r})"
+                )
+            if use:
+                from repro.kernels.seg_scan.ops import seg_suffix_scan_op
+
+                leaves, treedef = jax.tree.flatten(lifted)
+                out = seg_suffix_scan_op(leaves[0], end_flags, op)
+                return jax.tree.unflatten(treedef, [out])
+        return seg_suffix_scan(self.monoid, end_flags, lifted)
 
     # -- state -------------------------------------------------------------
 
@@ -405,41 +613,13 @@ class KeyedWindowStore:
         seg_end = vs & (nxt_head | nxt_invalid)
         sid = jnp.clip(jnp.cumsum(seg_head.astype(jnp.int32)) - 1, 0, C - 1)
 
-        # -- directory admission: one sequential pass over segment HEADS --
-        def body(i, acc):
-            dir_state, touched, head_slots, new_mask = acc
-
-            def admit(dir_state, touched, head_slots, new_mask):
-                dir_state, touched, slot, new = self.directory.admit_row(
-                    dir_state, touched, ks[i], tss[i]
-                )
-                return (
-                    dir_state,
-                    touched,
-                    head_slots.at[i].set(slot),
-                    new_mask.at[i].set(new),
-                )
-
-            return jax.lax.cond(
-                seg_head[i],
-                admit,
-                lambda d, t, hs, nm: (d, t, hs, nm),
-                dir_state,
-                touched,
-                head_slots,
-                new_mask,
-            )
-
-        dir_state, _, head_slots, new_heads = jax.lax.fori_loop(
-            0,
-            C,
-            body,
-            (
-                state["dir"],
-                jnp.zeros((S,), bool),
-                jnp.full((C,), -1, jnp.int32),
-                jnp.zeros((C,), bool),
-            ),
+        # -- directory admission: one vectorized pass over segment HEADS --
+        dir_state, head_slots, new_heads = self.directory.admit_heads(
+            state["dir"],
+            ks,
+            tss,
+            seg_head,
+            instrument=self.instrument_admission,
         )
 
         # -- per-segment fields broadcast to rows --------------------------
@@ -455,28 +635,48 @@ class KeyedWindowStore:
         a = head_pos[sid]
         b = end_pos[sid]
         slot = slot_by_seg[sid]
+        row_new = new_by_seg[sid]
         row_ok = vs & (slot >= 0)
         cslot = jnp.clip(slot, 0, S - 1)
         p = idx - a  # position within the segment
         n_seg = b - a + 1
 
-        # -- reset lanes claimed by newly-admitted keys --------------------
-        reset = jnp.zeros((S,), bool).at[
-            jnp.where(seg_head & new_heads & (head_slots >= 0), head_slots, S)
-        ].set(True, mode="drop")
-        carry0 = self._reset_lanes(state["carry"], reset)
-        n_seen0 = jnp.where(reset, 0, state["n_seen"])
+        # Reclaimed slots are handled GATHER-side: every read of a
+        # newly-admitted key's old lanes is masked to the identity instead
+        # of a full-(slots, h) reset pass — the previous tenant's values
+        # never leak, and per-chunk work stays O(C·h).  (Every admitted head
+        # also lands a scatter below, so no reclaimed slot keeps stale
+        # ``last``/``n_seen``.)
+        #
+        # All carry history comes through ONE (C, h) row gather (``crows``)
+        # so the donated (slots, h) buffer has exactly two uses — that
+        # gather (which feeds the scattered values) and the batched scatter
+        # itself.  A second independent read (e.g. a direct warm-prefix
+        # gather for ``ys``) leaves XLA unable to order the reads before
+        # the in-place scatter, and copy-insertion materializes full
+        # (slots, h) copies that put the K-cliff right back.
 
         # -- lift + intra-chunk variable-span folds ------------------------
         lifted = _mask_tree(jax.vmap(m.lift)(xss), row_ok, ident)
         starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
         intra = self._range_fold(m, lifted, starts, idx)
 
+        if h > 0:
+            crows = _mask_tree(
+                jax.tree.map(lambda cl: cl[cslot], state["carry"]),
+                ~row_new,
+                ident,
+            )
+
         # -- warm prefix: windows reaching into the key's history ----------
         if h > 0:
-            need_carry = row_ok & (p < h)
+            need_carry = row_ok & (p < h) & ~row_new
+            pidx = jnp.clip(p, 0, h - 1)[:, None]
             cvals = jax.tree.map(
-                lambda cl: cl[cslot, jnp.clip(p, 0, h - 1)], carry0
+                lambda cr: jnp.take_along_axis(
+                    cr, pidx.reshape((C, 1) + (1,) * (cr.ndim - 2)), axis=1
+                )[:, 0],
+                crows,
             )
             warmed = m.combine(cvals, intra)
             ys = _where_rows(need_carry, warmed, intra)
@@ -484,9 +684,9 @@ class KeyedWindowStore:
             ys = intra
         ys = _mask_tree(ys, row_ok, ident)
 
-        # -- refreshed carries, one scatter per touched segment ------------
+        # -- refreshed carries: ONE batched (C, h) scatter -----------------
         if h > 0:
-            ss = seg_suffix_scan(m, seg_end, lifted)
+            ss = self._seg_scan(seg_end, lifted)
             t_ax = jnp.arange(h, dtype=jnp.int32)
             need = h - t_ax  # trailing elements carry entry t must fold
             in_chunk = need[None, :] <= n_seg[:, None]  # (C, h)
@@ -494,7 +694,10 @@ class KeyedWindowStore:
             from_chunk = jax.tree.map(lambda s_: s_[src], ss)
             old_t = jnp.clip(t_ax[None, :] + n_seg[:, None], 0, h - 1)
             old = jax.tree.map(
-                lambda cl: cl[cslot[:, None], old_t], carry0
+                lambda cr: jnp.take_along_axis(
+                    cr, old_t.reshape((C, h) + (1,) * (cr.ndim - 2)), axis=1
+                ),
+                crows,
             )
             whole = jax.tree.map(
                 lambda s_: jnp.broadcast_to(
@@ -512,12 +715,12 @@ class KeyedWindowStore:
             head_scat = jnp.where(seg_head & row_ok, slot, S)
             carry1 = jax.tree.map(
                 lambda cl, nv: cl.at[head_scat].set(nv, mode="drop"),
-                carry0,
+                state["carry"],
                 new_carry,
             )
         else:
             head_scat = jnp.where(seg_head & row_ok, slot, S)
-            carry1 = carry0
+            carry1 = state["carry"]
 
         # -- per-slot latest aggregate + seen counts -----------------------
         y_end = _take0(ys, jnp.clip(b, 0, C - 1))
@@ -526,12 +729,9 @@ class KeyedWindowStore:
             state["last"],
             y_end,
         )
-        # a reclaimed slot that got no scatter this chunk (admission raced a
-        # later failure) must not keep the previous tenant's aggregate
-        landed = jnp.zeros((S,), bool).at[head_scat].set(True, mode="drop")
-        last1 = self._reset_lanes(last1, reset & ~landed)
-        n_seen1 = n_seen0.at[head_scat].add(
-            jnp.where(seg_head & row_ok, n_seg, 0), mode="drop"
+        n_seen1 = state["n_seen"].at[head_scat].set(
+            jnp.where(row_new, 0, state["n_seen"][cslot]) + n_seg,
+            mode="drop",
         )
 
         dropped_sorted = vs & ~row_ok
@@ -637,6 +837,14 @@ class KeyedChunkedStream:
         state = eng.init_state()
         state, ys, info = eng.process_chunk(state, keys, xs)   # (C,) rows
         state, ys = eng.stream(keys, xs)                       # whole stream
+
+    ``donate=True`` (the default) donates the state buffers into the jitted
+    update, making the (slots, h) carry scatter in-place — per-chunk cost
+    stays O(chunk·h) even when the resident state is huge.  The flip side:
+    a state passed to :meth:`process_chunk` is CONSUMED (its buffers are
+    deleted); always continue from the returned state, and pass
+    ``donate=False`` when external references to the state must stay live
+    (e.g. a checkpoint payload holding the same arrays).
     """
 
     def __init__(
@@ -645,12 +853,15 @@ class KeyedChunkedStream:
         window: int,
         slots: int,
         chunk: Optional[int] = None,
+        *,
+        donate: bool = True,
         **store_kwargs,
     ):
         self.store = KeyedWindowStore(monoid, window, slots, **store_kwargs)
         self.monoid = monoid
         self.window = self.store.window
         self.chunk = int(chunk) if chunk is not None else 1024
+        self.donate = bool(donate)
         self._jitted: dict = {}
         self._full_masks: dict = {}
 
@@ -672,14 +883,16 @@ class KeyedChunkedStream:
         key = (C, ts is not None)
         fn = self._jitted.get(key)
         if fn is None:
+            donate = dict(donate_argnums=(0,)) if self.donate else {}
             if ts is None:
                 fn = jax.jit(
                     lambda st, k, x, mk: self.store.update_chunk(
                         st, k, x, None, mk
-                    )
+                    ),
+                    **donate,
                 )
             else:
-                fn = jax.jit(self.store.update_chunk)
+                fn = jax.jit(self.store.update_chunk, **donate)
             self._jitted[key] = fn
         if ts is None:
             return fn(state, keys, xs, mask)
@@ -769,6 +982,8 @@ class ShardedKeyedStore:
         slots_per_shard: int,
         mesh,
         axis: str = "data",
+        *,
+        donate: bool = True,
         **store_kwargs,
     ):
         from jax.experimental.shard_map import shard_map
@@ -812,8 +1027,15 @@ class ShardedKeyedStore:
                     mesh=mesh,
                     in_specs=(specs, P(), P()) + (P(),) * len(rest),
                     out_specs=(specs, y_spec),
+                    # the batched-admission while_loop has no replication
+                    # rule; every output is explicitly sharded anyway
+                    check_rep=False,
                 )(st, keys, xs, *rest)
 
+            if donate:
+                # state-in is consumed: the per-shard carry scatter runs
+                # in-place (continue from the returned state only)
+                return jax.jit(wrapped, donate_argnums=(0,))
             return jax.jit(wrapped)
 
         self._update_with_ts = build(True)

@@ -415,8 +415,11 @@ class KeyedTelemetry:
         self.prepare = prepare
         self.window = int(window)
         self.slots = int(slots)
+        # donate=False: state_dict() hands out the LIVE state reference for
+        # checkpointing — a donated update would delete those buffers out
+        # from under the checkpoint payload.
         self._engine = KeyedChunkedStream(
-            self.monoid, self.window, self.slots, chunk, ttl=ttl
+            self.monoid, self.window, self.slots, chunk, ttl=ttl, donate=False
         )
         self._state = self._engine.init_state()
         self._query_jit = jax.jit(self._engine.store.query)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the segmented suffix scan.
+
+Deliberately a DIFFERENT formulation from both the kernel (blocked
+Hillis–Steele) and the production lax path (flipped ``associative_scan``
+on pair operands in :func:`repro.core.keyed.seg_suffix_scan`): a plain
+sequential right-to-left ``lax.scan``, one combine per element — the
+directly-readable spelling of the recurrence
+
+    out[t] = x[t]               if flags[t]  (t ends its segment)
+           = x[t] ⊗ out[t+1]    otherwise
+
+so kernel/lax/ref agreement cross-checks three independent derivations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ops_registry import combine_fn, identity_for
+
+
+def seg_suffix_scan_ref(x: jax.Array, flags: jax.Array, *, op: str = "sum"):
+    """``out[..., t] = x[..., t] ⊗ … ⊗ x[..., e(t)]`` along the last axis;
+    ``flags`` marks segment ends (``e(t)`` = first True at or after t)."""
+    comb = combine_fn(op)
+    ident = identity_for(op, x.dtype)
+    xs = jnp.moveaxis(jnp.asarray(x), -1, 0)
+    fs = jnp.moveaxis(jnp.asarray(flags, bool), -1, 0)
+
+    def step(carry, inp):
+        xv, fl = inp
+        out = jnp.where(fl, xv, comb(xv, carry))
+        return out, out
+
+    init = jnp.full(xs.shape[1:], ident, x.dtype)
+    _, ys = jax.lax.scan(step, init, (xs, fs), reverse=True)
+    return jnp.moveaxis(ys, 0, -1)

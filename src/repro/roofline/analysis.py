@@ -25,6 +25,17 @@ PEAK_FLOPS_BF16 = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 
+# Effective streaming bandwidth per backend for the memory-bound cost
+# models below.  The CPU figure is the measured single-core effective
+# bandwidth of this container on large gather/scatter+scan patterns (NOT
+# peak DRAM bandwidth — XLA:CPU runs these single-threaded); TPU/GPU use
+# the device HBM figure.
+BACKEND_EFF_BW = {
+    "cpu": 2.0e9,
+    "tpu": HBM_BW,
+    "gpu": 600e9,
+}
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -209,6 +220,65 @@ def model_flops(cfg, shape) -> float:
         return 2.0 * n * tokens
     # decode: one token per sequence
     return 2.0 * n * shape.global_batch
+
+
+def keyed_update_cost(
+    chunk: int,
+    window: int,
+    *,
+    value_bytes: int = 4,
+    probes: int = 32,
+    backend: Optional[str] = None,
+) -> dict:
+    """Memory-bound roofline for one keyed ``update_chunk`` dispatch.
+
+    Models the MANDATORY steady-state traffic of
+    :meth:`repro.core.keyed.KeyedWindowStore.update_chunk` — every term is
+    per-chunk, none scales with the slot pool (the donated carry scatter is
+    in-place, so the resident (slots, h) state contributes only the touched
+    rows):
+
+      * sort + segment bookkeeping: ``~log2(C)`` comparison passes over the
+        (C,) key lane plus a handful of (C,) index/mask lanes;
+      * directory probing: one ``(C, probes)`` int32 gather;
+      * carry traffic: ONE (C, h) row gather + ONE (C, h) batched scatter;
+      * range-fold doubling table: ``log2(W)`` levels built and queried;
+      * segmented suffix scan: ``log2(C)`` pair-operator passes over
+        (value, flag) lanes.
+
+    Returns ``{"bytes_per_chunk", "t_memory", "items_per_s_bound", "bw",
+    "backend"}``.  The bound is what a perfectly-fused implementation
+    hitting effective bandwidth would sustain; ``measured /
+    items_per_s_bound`` is the roofline-relative fraction benchmark rows
+    report.
+    """
+    import math
+
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    bw = BACKEND_EFF_BW.get(backend, BACKEND_EFF_BW["cpu"])
+    C = int(chunk)
+    h = max(int(window) - 1, 0)
+    lg_c = max(math.ceil(math.log2(max(C, 2))), 1)
+    lg_w = max(math.ceil(math.log2(max(window, 2))), 1)
+
+    b_sort = 2.0 * C * 4 * lg_c                 # argsort passes (int32 keys)
+    b_lanes = 10.0 * C * 4                      # segment/index/mask lanes
+    b_probe = C * probes * 4.0                  # directory gather
+    b_carry = 2.0 * C * h * value_bytes         # row gather + batched scatter
+    b_rfold = 3.0 * C * lg_w * value_bytes      # doubling table build+query
+    b_sscan = 3.0 * C * lg_c * (value_bytes + 4)  # pair-op scan (val+flag)
+    total = b_sort + b_lanes + b_probe + b_carry + b_rfold + b_sscan
+    t_mem = total / bw
+    return {
+        "bytes_per_chunk": total,
+        "t_memory": t_mem,
+        "items_per_s_bound": C / t_mem if t_mem > 0 else 0.0,
+        "bw": bw,
+        "backend": backend,
+    }
 
 
 def save_roofline(r: Roofline, path: str):

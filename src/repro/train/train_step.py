@@ -44,12 +44,21 @@ def init_train_state(
     optimizer: AdamW,
     metric_window: int = 128,
     compress: bool = False,
+    *,
+    metric_horizon: Optional[float] = None,
 ) -> TrainState:
+    """``metric_horizon=H`` switches the step-metric windows to event time
+    (last H seconds of wall clock) — pair it with the same ``metric_horizon``
+    in :func:`make_train_step`, whose step then takes a ``ts`` argument."""
+    if metric_horizon is not None:
+        mw = init_metric_windows(horizon=metric_horizon)
+    else:
+        mw = init_metric_windows(metric_window)
     return TrainState(
         params=params,
         opt_state=optimizer.init(params),
         step=jnp.zeros((), jnp.int32),
-        metric_windows=init_metric_windows(metric_window),
+        metric_windows=mw,
         compress_err=init_error_state(params) if compress else None,
     )
 
@@ -59,19 +68,33 @@ def make_train_step(
     optimizer: AdamW,
     compress: bool = False,
     accum_steps: int = 1,
+    *,
+    metric_horizon: Optional[float] = None,
 ):
     """``accum_steps > 1`` splits the global batch into microbatches scanned
     sequentially with f32 gradient accumulation — activation memory scales
     with the microbatch while gradient/optimizer numerics are unchanged (one
     update per step).  This is how the 4k-seq × 256-batch train shapes fit
-    16 GB/chip HBM (see EXPERIMENTS.md §Dry-run)."""
+    16 GB/chip HBM (see EXPERIMENTS.md §Dry-run).
+
+    ``metric_horizon=H`` makes the metric windows event-time: the returned
+    step is ``(state, batch, ts) -> (state, metrics)`` where ``ts`` is the
+    step's wall-clock timestamp in seconds (an f32 array so it stays a
+    traced argument — the trainer anchors ``time.perf_counter`` at start
+    and passes the offset), and the windowed loss/grad-norm stats cover
+    the last H seconds instead of the last N steps."""
 
     def grads_of(params, batch):
         return jax.value_and_grad(
             lambda p: loss_fn(p, cfg, batch), has_aux=True
         )(params)
 
-    def train_step(state: TrainState, batch: dict):
+    def train_step(state: TrainState, batch: dict, ts=None):
+        if metric_horizon is not None and ts is None:
+            raise ValueError(
+                "metric_horizon is set: the train step needs the step's "
+                "wall-clock timestamp — call step_fn(state, batch, ts)"
+            )
         if accum_steps == 1:
             (loss, aux), grads = grads_of(state.params, batch)
         else:
@@ -113,9 +136,15 @@ def make_train_step(
         params, opt_state, stats = optimizer.update(
             grads, state.opt_state, state.params
         )
-        mw = update_metric_windows(
-            state.metric_windows, loss, stats["grad_norm"]
-        )
+        if metric_horizon is not None:
+            mw = update_metric_windows(
+                state.metric_windows, loss, stats["grad_norm"],
+                ts=ts, horizon=metric_horizon,
+            )
+        else:
+            mw = update_metric_windows(
+                state.metric_windows, loss, stats["grad_norm"]
+            )
         metrics = {
             "loss": loss,
             "grad_norm": stats["grad_norm"],

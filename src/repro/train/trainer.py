@@ -19,6 +19,7 @@ import time
 from typing import Callable, Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.data.stream import SyntheticStream
 from repro.models.common import ModelConfig
@@ -52,6 +53,12 @@ class TrainerConfig:
     ckpt_every: int = 20
     ckpt_dir: str = "/tmp/repro_ckpt"
     metric_window: int = 64
+    # metric_horizon=H switches BOTH the in-step metric windows and the
+    # straggler baseline to event time (the last H seconds of wall clock
+    # instead of the last metric_window steps) — exactly the regime where
+    # stragglers make step counts and wall clock diverge.  The step
+    # timestamp is threaded through the jitted step as an f32 argument.
+    metric_horizon: Optional[float] = None
     straggler_z: float = 4.0
     compress_grads: bool = False
     log_every: int = 10
@@ -72,9 +79,17 @@ class Trainer:
         self.optimizer = optimizer
         self.stream = stream
         self.failures = failure_injector or FailureInjector()
-        self.time_window = TimeWindow(tcfg.metric_window)
+        self.time_window = TimeWindow(
+            tcfg.metric_window, horizon=tcfg.metric_horizon
+        )
         self.straggler_events: list[int] = []
-        self._step_fn = jit_fn(make_train_step(cfg, optimizer, tcfg.compress_grads))
+        self._step_fn = jit_fn(make_train_step(
+            cfg, optimizer, tcfg.compress_grads,
+            metric_horizon=tcfg.metric_horizon,
+        ))
+        # f32 holds ~7 significant digits: timestamps are anchored to the
+        # trainer's start so hours-long runs keep sub-ms ts resolution
+        self._ts_anchor = time.perf_counter()
         self._pending_ckpt = None
         self.history: list[dict] = []
 
@@ -87,6 +102,7 @@ class Trainer:
         return init_train_state(
             self.cfg, params, self.optimizer,
             self.tcfg.metric_window, self.tcfg.compress_grads,
+            metric_horizon=self.tcfg.metric_horizon,
         )
 
     def resume_or_init(self, key, shardings=None) -> TrainState:
@@ -107,7 +123,13 @@ class Trainer:
             batch = self.stream.batch_at(step)  # deterministic replay
             self.failures.maybe_fail(step)
             t0 = time.perf_counter()
-            state, metrics = self._step_fn(state, batch)
+            if self.tcfg.metric_horizon is not None:
+                # pass ts as an f32 ARRAY so jit traces it (a Python float
+                # would bake a new constant — and a recompile — every step)
+                ts = jnp.float32(t0 - self._ts_anchor)
+                state, metrics = self._step_fn(state, batch, ts)
+            else:
+                state, metrics = self._step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             step = int(state.step)

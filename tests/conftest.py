@@ -1,0 +1,20 @@
+"""Process-level hygiene for the tier-1 suite.
+
+XLA:CPU JIT-compiles every executable into freshly mmap'd code pages, and
+the full suite compiles thousands of programs in ONE pytest process.  Linux
+caps a process at ``vm.max_map_count`` (65530 by default) memory mappings;
+once the JIT's mmap fails, LLVM segfaults the interpreter mid-compile —
+observed reproducibly near the END of the full suite (at ~65.5k maps) while
+every module passes in isolation.  Dropping JAX's compilation caches
+between modules unmaps retired executables and keeps the mapping count
+bounded; the per-module recompiles cost a few seconds over the whole run.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    yield
+    jax.clear_caches()

@@ -1,10 +1,13 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.local_attention.ops import local_attention
+from repro.kernels.seg_scan.ops import seg_suffix_scan_op
+from repro.kernels.seg_scan.ref import seg_suffix_scan_ref
 from repro.kernels.sliding_window.ops import sliding_window_agg
 from repro.kernels.sliding_window.ref import sliding_window_ref
 from repro.kernels.suffix_scan.ops import suffix_scan
@@ -53,6 +56,69 @@ def test_suffix_scan(op, B, T, bt):
     y = suffix_scan(x, op, block_t=bt)
     yr = suffix_scan_ref(x, op=op)
     assert float(jnp.abs(y - yr).max()) < 5e-5
+
+
+SEG_LAYOUTS = ["random", "single", "singleton", "giant"]
+
+
+def _seg_flags(layout, B, T):
+    if layout == "random":
+        return jnp.asarray(rng.random((B, T)) < 0.2)
+    if layout == "single":  # one segment per row, closed at the end
+        return jnp.zeros((B, T), bool).at[:, -1].set(True)
+    if layout == "singleton":  # every element its own segment
+        return jnp.ones((B, T), bool)
+    return jnp.zeros((B, T), bool)  # giant: one never-closing segment
+
+
+@pytest.mark.parametrize("op", ["sum", "prod", "max", "logsumexp"])
+@pytest.mark.parametrize("layout", SEG_LAYOUTS)
+@pytest.mark.parametrize("B,T,bt", [(4, 64, 16), (3, 100, 32), (1, 7, 256)])
+def test_seg_suffix_scan_vs_ref(op, layout, B, T, bt):
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    f = _seg_flags(layout, B, T)
+    y = seg_suffix_scan_op(x, f, op, block_t=bt)
+    yr = seg_suffix_scan_ref(x, f, op=op)
+    assert float(jnp.abs(y - yr).max()) < 5e-5
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("layout", SEG_LAYOUTS)
+def test_seg_suffix_scan_vs_lax_fallback(op, layout):
+    """Kernel ≡ the production associative_scan path of core.keyed."""
+    from repro.core import monoids
+    from repro.core.keyed import seg_suffix_scan
+
+    m = {"sum": monoids.sum_monoid, "max": monoids.max_monoid}[op]()
+    B, T = 3, 129
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    f = _seg_flags(layout, B, T)
+    y = seg_suffix_scan_op(x, f, op, block_t=32)
+    yl = jax.vmap(lambda xi, fi: seg_suffix_scan(m, fi, xi))(x, f)
+    assert float(jnp.abs(y - yl).max()) < 5e-5
+
+
+def test_seg_suffix_scan_int_exact():
+    x = jnp.asarray(rng.integers(-9, 10, (2, 75)), jnp.int32)
+    f = _seg_flags("random", 2, 75)
+    y = seg_suffix_scan_op(x, f, "sum", block_t=16)
+    yr = seg_suffix_scan_ref(x, f, op="sum")
+    assert jnp.array_equal(y, yr)
+
+
+def test_seg_suffix_scan_all_ends_is_identity_map():
+    """Every element its own segment → the scan is the input itself."""
+    x = jnp.asarray(rng.standard_normal((2, 40)), jnp.float32)
+    y = seg_suffix_scan_op(x, jnp.ones((2, 40), bool), "sum")
+    assert jnp.array_equal(y, x)
+
+
+def test_seg_suffix_scan_no_ends_is_plain_suffix_scan():
+    """One never-closing segment → coincides with the unsegmented kernel."""
+    x = jnp.asarray(rng.standard_normal((2, 100)), jnp.float32)
+    y = seg_suffix_scan_op(x, jnp.zeros((2, 100), bool), "sum", block_t=32)
+    yu = suffix_scan(x, "sum", block_t=32)
+    assert float(jnp.abs(y - yu).max()) < 5e-5
 
 
 def test_suffix_scan_is_the_flip():

@@ -193,6 +193,115 @@ def test_keyed_stream_property():
     run()
 
 
+def test_keyed_new_key_mix_property():
+    """Chunks mixing 0 / few / many genuinely-new keys: the admission fast
+    path (no new keys), small batched admissions, and admission-heavy
+    chunks all reproduce the per-element reference bit-exactly."""
+    hyp = pytest.importorskip("hypothesis")
+    st_mod = pytest.importorskip("hypothesis.strategies")
+    given, settings, st = hyp.given, hyp.settings, st_mod
+
+    @given(
+        data=st.data(),
+        name=st.sampled_from(["sum_i32", "affine_i32"]),
+        window=st.integers(1, 8),
+        chunk=st.integers(4, 16),
+    )
+    @settings(max_examples=25, deadline=None)
+    def run(data, name, window, chunk):
+        make, gen = MONOID_CASES[name]
+        m = make()
+        local = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+        n_chunks = data.draw(st.integers(2, 6))
+        # per-chunk count of NEVER-seen keys: 0 → all-hit fast path,
+        # small → a one-round batched admission, chunk-many → every row new
+        mixes = [
+            data.draw(st.sampled_from([0, 1, 2, chunk]))
+            for _ in range(n_chunks)
+        ]
+        next_new = 0
+        keys = []
+        for n_new in mixes:
+            fresh = list(range(next_new, next_new + n_new))
+            next_new += n_new
+            pool = max(next_new, 1)
+            old = local.integers(0, pool, chunk - n_new)
+            ck = np.concatenate([np.asarray(fresh, np.int64), old])
+            local.shuffle(ck)
+            keys.append(ck)
+        keys = np.concatenate(keys).astype(np.int32)
+        T = len(keys)
+        vals = gen(T) if name != "affine_i32" else (
+            jnp.asarray(local.integers(-4, 4, T), jnp.int32),
+            jnp.asarray(local.integers(-5, 5, T), jnp.int32),
+        )
+        eng = KeyedChunkedStream(m, window, slots=next_new + chunk + 1,
+                                 chunk=chunk)
+        _, ys = eng.stream(keys, vals)
+        ref = per_key_reference(m, keys, _val_list(vals), window)
+        assert _tree_equal(ys, ref)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# Admission fast path + seg-scan kernel dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_admission_fast_path_taken_and_bit_exact():
+    """Steady-state chunks with NO new keys must take the all-hit fast
+    branch (no sequential admission work), counted via the trace-side
+    instrumentation callback — and stay bit-exact vs the reference."""
+    from repro.core.keyed import ADMISSION_COUNTS, reset_admission_counts
+
+    m = monoids.sum_monoid(jnp.int32)
+    W, chunk, U = 5, 16, 8
+    # chunk 0 contains the whole key universe (admits everything in one
+    # slow-path pass); the following 6 chunks reuse only known keys
+    warm = np.concatenate([np.arange(U), rng.integers(0, U, chunk - U)])
+    warm = warm.astype(np.int32)
+    keys = rng.integers(0, U, 6 * chunk).astype(np.int32)
+    wvals, vals = _scalar_vals(chunk), _scalar_vals(6 * chunk)
+    eng = KeyedChunkedStream(m, W, slots=U + 2, chunk=chunk,
+                             instrument_admission=True)
+    reset_admission_counts()
+    st, y0 = eng.stream(warm, wvals)
+    st, ys = eng.stream(keys, vals, state=st)
+    jax.effects_barrier()  # flush the debug callbacks before reading
+    assert ADMISSION_COUNTS["slow"] == 1, ADMISSION_COUNTS  # admitting chunk
+    assert ADMISSION_COUNTS["fast"] == 6, ADMISSION_COUNTS  # steady state
+    # the fast path must not change results: bit-exact vs the reference
+    ref = per_key_reference(
+        m, np.concatenate([warm, keys]),
+        _val_list(jnp.concatenate([wvals, vals])), W,
+    )
+    got = jnp.concatenate([y0, ys])
+    assert _tree_equal(got, ref)
+
+
+def test_store_seg_kernel_matches_lax_path():
+    """use_seg_kernel=True (Pallas segmented suffix scan, interpret mode on
+    CPU) reproduces the default lax path bit-exactly at the store level."""
+    m = monoids.sum_monoid(jnp.int32)
+    W, chunk, U, T = 6, 32, 11, 300
+    keys = rng.integers(0, U, T).astype(np.int32)
+    vals = _scalar_vals(T)
+    base = KeyedChunkedStream(m, W, slots=U + 1, chunk=chunk)
+    kern = KeyedChunkedStream(m, W, slots=U + 1, chunk=chunk,
+                              use_seg_kernel=True)
+    _, y0 = base.stream(keys, vals)
+    _, y1 = kern.stream(keys, vals)
+    assert jnp.array_equal(y0, y1)
+    ref = per_key_reference(m, keys, _val_list(vals), W)
+    assert _tree_equal(y1, ref)
+    # a pytree monoid has no scalar op → explicit kernel request is an error
+    with pytest.raises(ValueError):
+        KeyedWindowStore(monoids.affine_int_monoid(), W, slots=4,
+                         use_seg_kernel=True)._seg_scan(
+            jnp.zeros(4, bool), (jnp.zeros(4, jnp.int32),) * 2)
+
+
 # ---------------------------------------------------------------------------
 # Directory edge cases
 # ---------------------------------------------------------------------------

@@ -338,6 +338,61 @@ def test_time_window_horizon_straggler_baseline():
     assert not tw.is_straggler(0.1)
 
 
+def test_train_step_metric_horizon():
+    """metric_horizon= train step: ts threads through jit as a traced f32
+    (ONE compile across calls) and the windowed stats cover the last H
+    seconds of steps rather than the last N steps."""
+    from repro.configs import ARCHS
+    from repro.models.factory import make_smoke_batch, reduced_config
+    from repro.models.transformer import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    opt = AdamW(learning_rate=1e-3)
+    params = build_model(cfg).init_params(jax.random.key(0))
+    batch = make_smoke_batch(cfg, jax.random.key(1), B=2, S=16)
+    st = init_train_state(cfg, params, opt, metric_horizon=30.0)
+    step = jax.jit(make_train_step(cfg, opt, metric_horizon=30.0))
+    # three steps in the first seconds, a long stall, then two more
+    for ts in [0.0, 1.0, 2.0]:
+        st, m = step(st, batch, jnp.float32(ts))
+    assert int(m["win/steps"]) == 3
+    for ts in [100.0, 101.0]:
+        st, m = step(st, batch, jnp.float32(ts))
+    # watermark 101, horizon 30 → window (71, 101]: only the last two
+    assert int(m["win/steps"]) == 2
+    assert step._cache_size() == 1  # ts is traced, not baked in
+    # horizon mode refuses a ts-less call rather than silently degrading
+    with pytest.raises(ValueError):
+        make_train_step(cfg, opt, metric_horizon=30.0)(st, batch)
+
+
+def test_trainer_metric_horizon_wiring(tmp_path):
+    """TrainerConfig.metric_horizon reaches both the jitted step metrics
+    and the straggler TimeWindow, and the loop stamps real timestamps."""
+    from repro.configs import ARCHS
+    from repro.data.stream import SyntheticStream
+    from repro.models.factory import reduced_config
+    from repro.optim.adamw import AdamW
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = reduced_config(ARCHS["llama3.2-1b"])
+    tcfg = TrainerConfig(
+        total_steps=4, ckpt_every=100, ckpt_dir=str(tmp_path),
+        metric_window=8, metric_horizon=120.0, log_every=1,
+    )
+    stream = SyntheticStream(cfg, batch=2, seq=16, seed=1)
+    trainer = Trainer(cfg, tcfg, AdamW(learning_rate=1e-3), stream)
+    assert trainer.time_window.horizon == 120.0  # straggler side too
+    state = trainer.run(trainer.fresh_state(jax.random.key(0)))
+    assert int(state.step) == 4
+    rec = trainer.history[-1]
+    # all four steps fall inside the 120 s horizon
+    assert rec["win/steps"] == 4
+    assert np.isfinite(rec["win/loss_mean"])
+
+
 def test_serve_engine_request_telemetry():
     from repro.configs import ARCHS
     from repro.models.factory import reduced_config

@@ -10,15 +10,31 @@ Reported: items/s and the per-round ⊗-count distribution — bulk evictions
 make ALL algorithms pay O(k) for k expired items (matching the paper's
 observation that bulk evictions equalize max latency), but per-eviction cost
 stays O(1) only for DABA/DABA Lite.
+
+A second, jitted section benchmarks the BULK event-time engine
+(:class:`repro.core.event_time.EventTimeChunkedStream`) on a disordered
+stream across horizons, for both an invertible monoid (sum — prefix-scan
+fast path) and a non-invertible one (max — the segmented two-stacks flip
+sweep, constant combines per released element).  Bulk rows carry
+``roofline_frac`` against
+:func:`repro.roofline.analysis.eventtime_release_cost` and are the rows the
+CI ``--compare`` gate tracks (the per-element Fig-12 rows time host Python
+loops and are informational only)::
+
+    eventtime,max,bulk,horizon=1024,chunk=1024,T=30000,B=8,items_per_s=...
 """
 
 from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import ALGORITHMS, counting, monoids
+from repro.core.event_time import EventTimeChunkedStream
+from repro.data.stream import DisorderedEventStream
+from repro.roofline.analysis import eventtime_release_cost
 
 
 def synth_event_stream(n, seed=0):
@@ -57,7 +73,40 @@ def run_eventtime(algo_name, tau, n_items=20_000):
     return n_items / wall, counts
 
 
-def main(tau=10.0, n_items=6000):
+def bulk_throughput(monoid, horizon, T, B, chunk=1024, disorder=0.1,
+                    repeats=3, seed=7):
+    """Best-of-``repeats`` items/s for the bulk event-time engine on a
+    disordered stream (best-of beats machine noise; the engine is jitted
+    and state-free across repeats)."""
+    slack = max(float(horizon) / 16, 1.0)
+    s = DisorderedEventStream(T, B, mean_gap=1.0, disorder=disorder,
+                              slack=slack, seed=seed)
+    ts, xs = s.arrival()
+    eng = EventTimeChunkedStream(
+        monoid, float(horizon), slack=slack, chunk=chunk,
+        capacity=2 * int(horizon) + 64,
+        buffer=max(4 * int(slack) + 16, 64),
+    )
+    out = eng.stream(ts, xs)  # compile
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    best = 0.0
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = eng.stream(ts, xs)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        best = max(best, T * B / (time.perf_counter() - t0))
+    return best
+
+
+def _roofline_frac(thr, chunk, horizon, B):
+    bound = eventtime_release_cost(
+        chunk, 2 * int(horizon) + 64, batch=B
+    )["items_per_s_bound"]
+    return thr / bound if bound > 0 else 0.0
+
+
+def main(tau=10.0, n_items=6000, horizons=(256, 1024, 2048), bulk_T=30000,
+         bulk_B=8, bulk_chunk=1024):
     rows = []
     for algo in ["two_stacks_lite", "daba", "daba_lite"]:
         thr, counts = run_eventtime(algo, tau, n_items)
@@ -68,6 +117,16 @@ def main(tau=10.0, n_items=6000):
             f"combines_max={counts.max()}"
         )
         print(rows[-1], flush=True)
+    for name, monoid in (("sum", monoids.sum_monoid()),
+                         ("max", monoids.max_monoid())):
+        for h in horizons:
+            thr = bulk_throughput(monoid, h, bulk_T, bulk_B, chunk=bulk_chunk)
+            rows.append(
+                f"eventtime,{name},bulk,horizon={h},chunk={bulk_chunk},"
+                f"T={bulk_T},B={bulk_B},items_per_s={thr:.0f},"
+                f"roofline_frac={_roofline_frac(thr, bulk_chunk, h, bulk_B):.3f}"
+            )
+            print(rows[-1], flush=True)
     return rows
 
 

@@ -105,10 +105,17 @@ def _roofline_frac(thr, chunk, window):
 
 
 def main(Ks=(256, 4096, 65536), window=256, chunks=(1024, 4096), T=65536,
-         loop_T=1500):
+         loop_T=1500, big_windows=(4096,), big_K=4096, big_chunk=1024,
+         big_T=32768):
     """``loop_T``: the per-key loop is timed on a truncated stream and
     scaled — its per-item cost is constant and 64k eager dispatches would
-    dominate the benchmark wall clock."""
+    dominate the benchmark wall clock.
+
+    ``big_windows``: large-window rows at K=``big_K`` for BOTH an
+    invertible monoid (sum — prefix-scan fast path) and a non-invertible
+    one (max — the segmented two-stacks flip sweep).  This is the regime
+    where the retired log2(W) range-fold table was most expensive; the
+    max row at window=4096 is the acceptance configuration."""
     rows = []
     monoid = monoids.sum_monoid(jnp.int32)
 
@@ -140,6 +147,15 @@ def main(Ks=(256, 4096, 65536), window=256, chunks=(1024, 4096), T=65536,
             f"keyed,sum,speedup,K={K},window={window},T={T},"
             f"x={best / thr_loop:.1f}"
         )
+    for W in big_windows:
+        for mname, mono in (("sum", monoid),
+                            ("max", monoids.max_monoid(jnp.int32))):
+            thr = bulk_throughput(mono, W, big_K, big_T, big_chunk)
+            emit(
+                f"keyed,{mname},bulk,K={big_K},window={W},"
+                f"chunk={big_chunk},T={big_T},items_per_s={thr:.0f},"
+                f"roofline_frac={_roofline_frac(thr, big_chunk, W):.3f}"
+            )
     return rows
 
 

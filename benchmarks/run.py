@@ -62,9 +62,11 @@ def emit_json(name: str, rows, out_dir: str = ".") -> pathlib.Path:
 
 
 # rows with these labels are informational, not regression-gated: the
-# per-key Python loop times host dict/dispatch overhead (noisy across
-# machines), speedup/tune rows carry no items_per_s of their own
-_COMPARE_SKIP_LABELS = {"per_key_loop", "speedup", "tune", "tune_best"}
+# per-key Python loop and the Fig-12 relvar rows time host Python-loop
+# dispatch overhead (noisy across machines), speedup/tune rows carry no
+# items_per_s of their own
+_COMPARE_SKIP_LABELS = {"per_key_loop", "relvar", "speedup", "tune",
+                        "tune_best"}
 
 
 def _row_key(rec: dict):
@@ -199,7 +201,13 @@ def main() -> None:
         done("dynamic", rows)
     if on("eventtime"):
         print("# Fig 12 — event-time windows (synthetic bursty stream)")
-        rows = bench_eventtime.main(n_items=2000 if args.quick else 6000)
+        if args.quick:
+            # bulk rows keep horizon=1024 so CI gates the constant-combine
+            # flip-sweep regime, not just the small-window one
+            rows = bench_eventtime.main(n_items=2000, horizons=(256, 1024),
+                                        bulk_T=12000)
+        else:
+            rows = bench_eventtime.main()
         done("eventtime", rows)
     if on("batched"):
         print("# beyond-paper — batched/SIMD SWAG")
@@ -220,9 +228,11 @@ def main() -> None:
         print("# beyond-paper — keyed window store (per-key windows, bulk)")
         if args.quick:
             # K=64k rides along at reduced T so CI exercises the very
-            # cliff the fused hot path exists to kill
+            # cliff the fused hot path exists to kill; the window=4096
+            # max row rides along (reduced T) so CI gates the flip-sweep
+            # acceptance configuration too
             rows = bench_keyed.main(Ks=(256, 4096, 65536), chunks=(1024,),
-                                    T=16384, loop_T=400)
+                                    T=16384, loop_T=400, big_T=8192)
         else:
             rows = bench_keyed.main()
         done("keyed", rows)

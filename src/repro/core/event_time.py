@@ -59,15 +59,37 @@ stream would use — the FiBA papers' in-order merge discipline — so
 non-commutative monoids (argmax tie-breaks, m4 first/last, affine
 composition) stay exact: no combine ever sees its operands swapped.
 
+The flip invariant (constant-combine bulk outputs)
+--------------------------------------------------
+
+THIS is the one place the sweep contract is stated; README "The keyed hot
+path" and :mod:`repro.core.keyed` cross-reference it.
+
 Per-released-element outputs cover a *variable-width* span (everything with
 ``ts' > ts - horizon``), which a fixed-count sliding pass cannot produce.
-The engine builds a doubling (sparse) table over the merged
-window-plus-released array — ``table[k][i] = fold(arr[i .. i + 2^k))`` — and
-assembles each output as the left-to-right product of the binary
-decomposition of its span: O(log(window + chunk)) combines per element,
-fully vectorized, any monoid.  (A flat-array stand-in for the FiBA tree;
-invertible *commutative* monoids — sum, count, mean, … — skip the table and
-use one prefix scan plus ``inverse_front``, ~1 combine per element.)
+Because releases are processed in event order, the query set is **monotone**:
+both the span starts and the span ends are non-decreasing over the merged
+window-plus-released array.  That is exactly the two-stacks regime: partition
+the array at *flip boundaries* chosen so every query's start lands in the
+partition cell *before* (or at the start of) the cell holding its end; then
+
+    out[q] = suffix_scan_within_cell[start_q] ⊗ prefix_scan_from_cell_start[end_q]
+
+— one segmented suffix scan + one segmented prefix scan + one combine per
+query: a worst-case-constant number of ⊗ per swept element, for ANY monoid
+(:func:`flip_range_fold`; the retired O(log(W+C)) doubling table survives as
+:func:`range_fold`, kept as the bit-exactness reference).  Invertible
+*commutative* monoids — sum, count, mean, … — skip even that and use one
+prefix scan plus ``inverse_front`` (:func:`range_fold_invertible`).
+
+**Operand-order rule (non-commutative monoids).**  Every combine keeps the
+OLDER operand on the left: the suffix-scan term covers ``[start_q, flip)``
+and therefore sits LEFT of the prefix-scan term covering ``[flip, end_q]``;
+inside :func:`seg_suffix_scan` the array is flipped, so its pair operator
+swaps its operands back (``combine(newer-flipped b, a)``), while
+:func:`seg_prefix_scan` combines in natural order.  No combine anywhere in
+the sweep ever sees its operands swapped — argmax tie-breaks, m4
+first/last, and affine composition stay bit-exact.
 
 Timestamps are any real dtype; values strictly inside (``TS_MIN``,
 ``TS_MAX``) of that dtype (the extremes are the engine's pad sentinels).
@@ -79,6 +101,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 from typing import Any, Optional
 
 import jax
@@ -238,6 +261,168 @@ def range_fold_invertible(monoid: Monoid, arr: PyTree, starts, ends) -> PyTree:
     return _where_rows(empty_or_pad, identity_rows, full)
 
 
+# Host-side ⊗ counters for the flip sweeps (engines built with
+# ``instrument_combines=True``): every combine in an instrumented sweep
+# bumps its engine's counter by the number of element-rows it touched — the
+# regression tests assert combines-per-swept-element stays FLAT as the
+# window grows (the constant-combine claim, measured at runtime).  Same
+# pattern as ``repro.core.keyed.ADMISSION_COUNTS``; call
+# ``jax.effects_barrier()`` before reading.
+COMBINE_COUNTS = {"eventtime": 0, "keyed": 0}
+
+
+def reset_combine_counts() -> None:
+    for k in COMBINE_COUNTS:
+        COMBINE_COUNTS[k] = 0
+
+
+def _count_combines(key: str, n: int) -> None:
+    COMBINE_COUNTS[key] += n
+
+
+def counting_combines(monoid: Monoid, key: str) -> Monoid:
+    """``monoid`` with a combine that bumps ``COMBINE_COUNTS[key]`` by the
+    static leading-axis length of its operands at every runtime invocation
+    (a ``jax.debug.callback``, so jitted executions are counted too)."""
+
+    def combine(a, b):
+        n = int(chunk_length(a))
+        jax.debug.callback(lambda key=key, n=n: _count_combines(key, n))
+        return monoid.combine(a, b)
+
+    return dataclasses.replace(
+        monoid, name=monoid.name + "#combcount", combine=combine
+    )
+
+
+# ---------------------------------------------------------------------------
+# Segmented scans (the flip-sweep building blocks)
+# ---------------------------------------------------------------------------
+
+
+def seg_suffix_scan(monoid: Monoid, end_flags, lifted: PyTree) -> PyTree:
+    """Suffix scan that resets at segment ends: ``out[i] = x_i ⊗ … ⊗ x_e(i)``
+    where ``e(i)`` is the last index of i's segment (``end_flags[e] = True``).
+
+    Built from the classic segmented-scan pair operator on the flipped
+    array with swapped combine operands, keeping the older operand LEFT
+    (the operand-order rule in the module docstring) — exact for
+    non-commutative monoids.
+    """
+    flags = jnp.flip(jnp.asarray(end_flags, bool))
+    vals = jax.tree.map(lambda a: jnp.flip(a, 0), lifted)
+
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        merged = monoid.combine(vb, va)  # flipped order: b is OLDER
+        v = jax.tree.map(
+            lambda mv, bv: jnp.where(_bc(fb, bv), bv, mv), merged, vb
+        )
+        return (fa | fb, v)
+
+    _, out = jax.lax.associative_scan(comb, (flags, vals), axis=0)
+    return jax.tree.map(lambda a: jnp.flip(a, 0), out)
+
+
+def seg_prefix_scan(monoid: Monoid, start_flags, lifted: PyTree) -> PyTree:
+    """Prefix scan that resets at segment starts: ``out[i] = x_s(i) ⊗ … ⊗ x_i``
+    where ``s(i)`` is the last index ≤ i with ``start_flags`` True (0 when
+    none).  Natural-order pair operator, older operand LEFT — the mirror of
+    :func:`seg_suffix_scan` and the second half of every flip sweep."""
+    flags = jnp.asarray(start_flags, bool)
+
+    def comb(a, b):
+        fa, va = a
+        fb, vb = b
+        merged = monoid.combine(va, vb)  # a is OLDER: left
+        v = jax.tree.map(
+            lambda mv, bv: jnp.where(_bc(fb, bv), bv, mv), merged, vb
+        )
+        return (fa | fb, v)
+
+    _, out = jax.lax.associative_scan(comb, (flags, lifted), axis=0)
+    return out
+
+
+def flip_range_fold(monoid: Monoid, arr: PyTree, starts, ends, *,
+                    instrument: Optional[str] = None) -> PyTree:
+    """:func:`range_fold` for MONOTONE query sets in O(1) combines/element.
+
+    Requires ``starts`` non-decreasing and ``ends`` STRICTLY increasing (the
+    flip invariant — see the module docstring; violating it silently returns
+    wrong folds: two same-end queries with different starts cannot share one
+    flip cell).  Released merge positions satisfy both by construction.
+    Flip boundaries are the orbit of ``hop(b) = max(b+1, first i whose
+    per-position window start ≥ b)`` from 0, marked by gather-only binary
+    lifting (O(M log M) *integer* work, zero ⊗, no scatters — scatters
+    lower to sequential loops on CPU and were ~40× slower); outputs are one
+    segmented suffix scan + one segmented prefix scan + one combine per
+    query.  Empty spans
+    (``ends < starts``) yield the identity.  ``instrument`` names a
+    ``COMBINE_COUNTS`` key to bump per runtime combine.
+    """
+    ident = monoid.identity()
+    m = counting_combines(monoid, instrument) if instrument else monoid
+    M = int(chunk_length(arr))
+    starts = jnp.asarray(starts, jnp.int32)
+    ends = jnp.asarray(ends, jnp.int32)
+    Q = int(starts.shape[0])
+    if M == 0 or Q == 0:
+        return jax.tree.map(
+            lambda a, i: jnp.broadcast_to(
+                jnp.asarray(i, a.dtype), (Q,) + a.shape[1:]
+            ),
+            arr,
+            ident,
+        )
+    idx = jnp.arange(M, dtype=jnp.int32)
+
+    # Per-position window start: the smallest start among queries ending at
+    # or after i (monotone), clamped to ≤ i so positions no query ends at
+    # never force a boundary of their own.
+    qi = jnp.searchsorted(ends, idx, side="left").astype(jnp.int32)
+    sbar = jnp.where(qi >= Q, M, starts[jnp.clip(qi, 0, Q - 1)])
+    s_pos = jnp.clip(jnp.minimum(sbar, idx), 0, M)
+
+    # hop(b) = max(b+1, first i with s_pos[i] >= b); boundaries = orbit of 0.
+    # For every query q with end in cell [B_m, B_{m+1}): B_{m-1} <= start_q
+    # <= B_m.  Binary lifting: levels[d] = hop^(2^d); a greedy descent from 0
+    # yields, for each position i, the largest orbit element <= i (every step
+    # count is a sum of powers of two) — i is a boundary iff that is i itself.
+    bpos = jnp.arange(M + 1, dtype=jnp.int32)
+    first_ge = jnp.searchsorted(s_pos, bpos, side="left").astype(jnp.int32)
+    hop = jnp.minimum(jnp.maximum(bpos + 1, first_ge), M)
+    levels = [hop]
+    for _ in range(max(1, math.ceil(math.log2(M + 1))) - 1):
+        levels.append(levels[-1][levels[-1]])
+    cur = jnp.zeros((M + 1,), jnp.int32)
+    for lv in reversed(levels):
+        nxt = lv[cur]
+        cur = jnp.where(nxt <= bpos, nxt, cur)
+    mark = cur == bpos
+
+    start_flags = mark[:M]
+    end_flags = mark[1:] | (idx == M - 1)
+    cellstart = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(start_flags, idx, 0)
+    )
+    bpref = seg_prefix_scan(m, start_flags, arr)
+    bsuf = seg_suffix_scan(m, end_flags, arr)
+
+    e_c = jnp.clip(ends, 0, M - 1)
+    right = _take0(bpref, e_c)  # [cellstart[e], e]
+    left = _take0(bsuf, jnp.clip(starts, 0, M - 1))  # [s, its cell end]
+    both = m.combine(left, right)  # older operand LEFT
+    out = _where_rows(starts >= cellstart[e_c], right, both)
+    identity_rows = jax.tree.map(
+        lambda a, i: jnp.broadcast_to(jnp.asarray(i, a.dtype), a.shape),
+        out,
+        ident,
+    )
+    return _where_rows((ends < starts) | (ends < 0), identity_rows, out)
+
+
 # ---------------------------------------------------------------------------
 # Per-element protocol
 # ---------------------------------------------------------------------------
@@ -340,10 +525,12 @@ class EventTimeChunkedStream:
         res = eng.stream(ts, xs)      # whole stream + flush, compacted
 
     Per chunk: watermark advance, stable time-sort of (reorder buffer ++
-    chunk), release of everything at or below the watermark, one stable
-    merge into the live window, per-released-element window outputs via
-    :func:`range_fold` (or the invertible-commutative prefix-scan fast
-    path), and a watermark-driven bulk eviction of expired window entries.
+    chunk), release of everything at or below the watermark, one rank-based
+    stable merge into the live window, per-released-element window outputs
+    via the constant-combine :func:`flip_range_fold` sweep (or the
+    invertible-commutative prefix-scan fast path), and a watermark-driven
+    bulk eviction of expired window entries (a contiguous slice of the
+    merged array — no re-sort).
     All shapes are static — full and (mask-padded) ragged chunks share one
     compilation, mirroring :class:`repro.core.chunked.ChunkedStream`.
 
@@ -367,6 +554,7 @@ class EventTimeChunkedStream:
         late_policy: str = "drop",
         ts_dtype=jnp.float32,
         use_inverse: Optional[bool] = None,
+        instrument_combines: bool = False,
     ):
         if late_policy not in ("drop", "side_output", "merge"):
             raise ValueError(f"unknown late_policy {late_policy!r}")
@@ -384,6 +572,7 @@ class EventTimeChunkedStream:
         if use_inverse is None:
             use_inverse = monoid.invertible and monoid.commutative
         self._use_inverse = use_inverse
+        self.instrument_combines = bool(instrument_combines)
         self._jitted = {}  # (C, with_outputs) -> jitted impl
         self._full_masks: dict = {}
 
@@ -535,41 +724,73 @@ class EventTimeChunkedStream:
         buf_agg_new = jax.tree.map(lambda a: a[:K], nb_agg)
 
         # -- stable merge of released elements into the window --------------
-        comb_ts = jnp.concatenate([state["win_ts"], rel_ts])
-        comb_agg = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0),
-            state["win_agg"],
-            rel_agg,
+        # Both runs are already time-sorted (window ascending with tmin pads
+        # in front; released prefix ascending with tmax pads behind), so the
+        # merged position of every row is its own index plus its RANK in the
+        # other run — searchsorteds and gathers replace the old stable
+        # argsort over W+P rows plus its inverse permutation (and the
+        # scatter dual: scatters lower to sequential loops on CPU).  Tie
+        # discipline (merge-order invariant): window entries precede
+        # same-timestamp released entries (win side="left", rel side="right").
+        win_ts = state["win_ts"]
+        Mtot = W + P
+        pos_win = jnp.arange(W, dtype=jnp.int32) + jnp.searchsorted(
+            rel_ts, win_ts, side="left"
+        ).astype(jnp.int32)
+        pos_rel = jj + jnp.searchsorted(
+            win_ts, rel_ts, side="right"
+        ).astype(jnp.int32)
+        # gather dual: pos_win is strictly increasing, so the last window
+        # position <= i tells merged row i which run it came from and its
+        # rank there (#rel rows <= i is then i - wsel - 1).
+        mi = jnp.arange(Mtot, dtype=jnp.int32)
+        wsel = jnp.searchsorted(pos_win, mi, side="right").astype(jnp.int32) - 1
+        wsel_c = jnp.clip(wsel, 0, W - 1)
+        from_win = (wsel >= 0) & (pos_win[wsel_c] == mi)
+        rsel = jnp.clip(mi - wsel - 1, 0, P - 1)
+        mts = jnp.where(from_win, win_ts[wsel_c], rel_ts[rsel])
+        magg = _where_rows(
+            from_win, _take0(state["win_agg"], wsel_c), _take0(rel_agg, rsel)
         )
-        order2 = jnp.argsort(comb_ts, stable=True)
-        inv2 = jnp.argsort(order2)  # inverse permutation
-        mts = comb_ts[order2]
-        magg = _take0(comb_agg, order2)
 
         # -- per-released-element outputs: fold over (ts - horizon, ts] -----
+        # Released queries are monotone in both start and end — the flip
+        # invariant (module docstring) — so the non-invertible path is one
+        # constant-combine flip sweep instead of the old doubling table.
         if with_outputs:
-            ends = inv2[W + jj].astype(jnp.int32)
+            ends = pos_rel
             starts = jnp.searchsorted(
                 mts, rel_ts - self.horizon, side="right"
             ).astype(jnp.int32)
-            fold = range_fold_invertible if self._use_inverse else range_fold
-            ys = fold(m, magg, starts, ends)
+            # materialize the gathered merge once: without the barrier XLA
+            # re-fuses the merge gathers into every scan round of the sweep
+            marr = jax.lax.optimization_barrier(magg)
+            if self._use_inverse:
+                ys = range_fold_invertible(m, marr, starts, ends)
+            else:
+                ys = flip_range_fold(
+                    m, marr, starts, ends,
+                    instrument="eventtime" if self.instrument_combines
+                    else None,
+                )
         else:
             ys = None
 
         # -- watermark-driven bulk eviction + window re-pack ----------------
-        keep = (mts > evict_thr) & (mts < tmax) & (mts > tmin)
-        key = jnp.where(keep, mts, tmin)
-        kagg = _mask_tree(magg, keep, ident)
-        order3 = jnp.argsort(key, stable=True)
-        skey = key[order3]
-        sagg = _take0(kagg, order3)
-        Mtot = W + P
-        win_ts_new = skey[Mtot - W:]
-        win_agg_new = jax.tree.map(lambda a: a[Mtot - W:], sagg)
-        n_overflow = n_overflow + jnp.maximum(
-            keep.sum(dtype=jnp.int32) - W, 0
-        )
+        # Kept entries are a contiguous range of the merged (sorted) array:
+        # (max(evict_thr, tmin), tmax).  Right-align its newest W entries
+        # into the window with one gather — no argsort re-pack.
+        lo = jnp.searchsorted(
+            mts, jnp.maximum(evict_thr, tmin), side="right"
+        ).astype(jnp.int32)
+        hi = jnp.searchsorted(mts, tmax, side="left").astype(jnp.int32)
+        n_keep = hi - lo
+        wsrc = hi - W + jnp.arange(W, dtype=jnp.int32)
+        valid_w = wsrc >= lo
+        wsrc_c = jnp.clip(wsrc, 0, Mtot - 1)
+        win_ts_new = jnp.where(valid_w, mts[wsrc_c], tmin)
+        win_agg_new = _mask_tree(_take0(magg, wsrc_c), valid_w, ident)
+        n_overflow = n_overflow + jnp.maximum(n_keep - W, 0)
 
         state = {
             "win_ts": win_ts_new,

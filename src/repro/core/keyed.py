@@ -22,11 +22,13 @@ SWAG machinery:
     ``(key, x)`` chunk becomes ONE fused segment-wise dispatch: stable sort
     by key (arrival order preserved within key — non-commutative monoids
     stay bit-exact vs the per-key per-element reference), segment
-    boundaries, directory admission, per-row window outputs via
-    variable-span range folds (:func:`repro.core.event_time.range_fold`),
-    and one scatter of refreshed carries — instead of K tiny per-key
-    updates (cf. the bulk-eviction direction of arXiv 2307.11210, extended
-    across the key dimension).
+    boundaries, directory admission, per-row window outputs via a
+    constant-combine segmented two-stacks flip sweep (the flip invariant —
+    see the :mod:`repro.core.event_time` module docstring, the ONE place
+    stating it and the suffix-scan operand-order rule), and one scatter of
+    refreshed carries — instead of K tiny per-key updates (cf. the
+    bulk-eviction direction of arXiv 2307.11210, extended across the key
+    dimension).
 
 The hot-path anatomy keeps every per-dispatch cost proportional to the
 CHUNK, never to the slot pool:
@@ -38,12 +40,16 @@ CHUNK, never to the slot pool:
      round-based *batched* admission that inserts every genuinely-new head
      per round with scatter-min conflict resolution — sequential only in
      the (few) probe-conflict rounds, not per key;
-  3. per-row outputs from intra-chunk range folds + a warm-prefix gather of
-     (C, h) carry lanes — reclaimed slots are masked to the identity at the
-     GATHER (never a full-(slots, h) reset pass);
-  4. refreshed carries from one segmented suffix scan
-     (:func:`seg_suffix_scan`, or the fused ``kernels/seg_scan`` Pallas
-     kernel for scalar monoids on TPU) and ONE batched (C, h) scatter.
+  3. per-row outputs from the intra-chunk flip sweep — one segmented
+     prefix scan + one segmented suffix scan at W-aligned block boundaries
+     (O(1) ⊗ per row, flat in W; invertible commutative monoids keep the
+     one-prefix-scan ``range_fold_invertible`` fast path) — plus a
+     warm-prefix gather of (C, h) carry lanes; reclaimed slots are masked
+     at the GATHER (never a full-(slots, h) reset pass);
+  4. refreshed carries from one more segmented suffix scan
+     (:func:`seg_suffix_scan` / :func:`seg_prefix_scan`, or the fused
+     ``kernels/seg_scan`` Pallas kernels for scalar monoids on TPU) fused
+     into two masked gathers and ONE batched (C, h) scatter.
 
 :class:`KeyedChunkedStream` donates the state buffers into the jitted
 update, so that scatter is in-place — per-chunk work stays O(C·h) while
@@ -71,9 +77,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import swag_base
-from repro.core.event_time import range_fold, range_fold_invertible
+from repro.core.event_time import (
+    COMBINE_COUNTS,
+    counting_combines,
+    range_fold_invertible,
+    reset_combine_counts,
+    seg_prefix_scan,
+    seg_suffix_scan,
+)
 from repro.core.monoids import Monoid, _hash_u32
 from repro.core.swag_base import chunk_length
+
+__all__ = [
+    "KeyDirectory",
+    "KeyedWindowStore",
+    "KeyedChunkedStream",
+    "ShardedKeyedStore",
+    "COMBINE_COUNTS",
+    "counting_combines",
+    "reset_combine_counts",
+    "seg_prefix_scan",
+    "seg_suffix_scan",
+]
 
 PyTree = Any
 
@@ -118,34 +143,9 @@ def _take0(tree: PyTree, idx) -> PyTree:
     return jax.tree.map(lambda a: a[idx], tree)
 
 
-# ---------------------------------------------------------------------------
-# Segmented scans (key-partitioned chunks)
-# ---------------------------------------------------------------------------
-
-
-def seg_suffix_scan(monoid: Monoid, end_flags, lifted: PyTree) -> PyTree:
-    """Suffix scan that resets at segment ends: ``out[i] = x_i ⊗ … ⊗ x_e(i)``
-    where ``e(i)`` is the last index of i's segment (``end_flags[e] = True``).
-
-    Built from the classic segmented-scan pair operator on the flipped
-    array with swapped combine operands, mirroring the operand-order
-    discipline of :func:`repro.core.swag_base.suffix_scan` — exact for
-    non-commutative monoids.
-    """
-    flags = jnp.flip(jnp.asarray(end_flags, bool))
-    vals = jax.tree.map(lambda a: jnp.flip(a, 0), lifted)
-
-    def comb(a, b):
-        fa, va = a
-        fb, vb = b
-        merged = monoid.combine(vb, va)  # flipped order: b is OLDER
-        v = jax.tree.map(
-            lambda mv, bv: jnp.where(_bc(fb, bv), bv, mv), merged, vb
-        )
-        return (fa | fb, v)
-
-    _, out = jax.lax.associative_scan(comb, (flags, vals), axis=0)
-    return jax.tree.map(lambda a: jnp.flip(a, 0), out)
+# The segmented scans (seg_suffix_scan / seg_prefix_scan) live in
+# :mod:`repro.core.event_time` next to the flip-invariant statement they
+# implement; they are re-exported above for back-compat.
 
 
 # ---------------------------------------------------------------------------
@@ -472,6 +472,7 @@ class KeyedWindowStore:
         use_inverse: Optional[bool] = None,
         use_seg_kernel: Optional[bool] = None,
         instrument_admission: bool = False,
+        instrument_combines: bool = False,
     ):
         self.monoid = monoid
         self.window = int(window)
@@ -483,12 +484,38 @@ class KeyedWindowStore:
         self.ttl = ttl
         if use_inverse is None:
             use_inverse = monoid.invertible and monoid.commutative
-        self._range_fold = range_fold_invertible if use_inverse else range_fold
-        # seg_scan Pallas kernel: None = auto (scalar-monoid gate AND TPU
+        self.use_inverse = bool(use_inverse)
+        # seg_scan Pallas kernels: None = auto (scalar-monoid gate AND TPU
         # backend), True = force (raises for unsupported monoids), False =
         # always the lax associative_scan path.
         self.use_seg_kernel = use_seg_kernel
         self.instrument_admission = bool(instrument_admission)
+        # instrument_combines routes every sweep ⊗ through
+        # ``COMBINE_COUNTS["keyed"]`` — forces the lax scan path (the Pallas
+        # kernel cannot host the debug callback).
+        self.instrument_combines = bool(instrument_combines)
+
+    def _kernel_op(self) -> Optional[str]:
+        """The seg_scan kernel op for this store, or None for the lax path."""
+        use = self.use_seg_kernel
+        if self.instrument_combines or not (use is None or use):
+            return None
+        from repro.kernels.ops_registry import op_for_monoid
+
+        op = op_for_monoid(self.monoid)
+        if use is None:
+            return op if (op is not None
+                          and jax.default_backend() == "tpu") else None
+        if op is None:
+            raise ValueError(
+                "use_seg_kernel=True needs a scalar-op monoid "
+                f"(got {getattr(self.monoid, 'name', self.monoid)!r})"
+            )
+        return op
+
+    def _sweep_monoid(self) -> Monoid:
+        return (counting_combines(self.monoid, "keyed")
+                if self.instrument_combines else self.monoid)
 
     def _seg_scan(self, end_flags, lifted: PyTree) -> PyTree:
         """Segmented suffix scan over the sorted chunk — the fused
@@ -496,25 +523,27 @@ class KeyedWindowStore:
         scalar-monoid structural gate (auto: only on TPU; ``interpret``
         under the kernel keeps CPU tests exact), else the generic
         :func:`seg_suffix_scan` lax fallback."""
-        use = self.use_seg_kernel
-        if use is None or use:
-            from repro.kernels.ops_registry import op_for_monoid
+        op = self._kernel_op()
+        if op is not None:
+            from repro.kernels.seg_scan.ops import seg_suffix_scan_op
 
-            op = op_for_monoid(self.monoid)
-            if use is None:
-                use = op is not None and jax.default_backend() == "tpu"
-            elif op is None:
-                raise ValueError(
-                    "use_seg_kernel=True needs a scalar-op monoid "
-                    f"(got {getattr(self.monoid, 'name', self.monoid)!r})"
-                )
-            if use:
-                from repro.kernels.seg_scan.ops import seg_suffix_scan_op
+            leaves, treedef = jax.tree.flatten(lifted)
+            out = seg_suffix_scan_op(leaves[0], end_flags, op)
+            return jax.tree.unflatten(treedef, [out])
+        return seg_suffix_scan(self._sweep_monoid(), end_flags, lifted)
 
-                leaves, treedef = jax.tree.flatten(lifted)
-                out = seg_suffix_scan_op(leaves[0], end_flags, op)
-                return jax.tree.unflatten(treedef, [out])
-        return seg_suffix_scan(self.monoid, end_flags, lifted)
+    def _seg_pscan(self, start_flags, lifted: PyTree) -> PyTree:
+        """Segmented PREFIX scan — the mirror of :meth:`_seg_scan`, behind
+        the same kernel gate (``kernels/seg_scan``'s prefix variant on TPU,
+        :func:`seg_prefix_scan` lax fallback)."""
+        op = self._kernel_op()
+        if op is not None:
+            from repro.kernels.seg_scan.ops import seg_prefix_scan_op
+
+            leaves, treedef = jax.tree.flatten(lifted)
+            out = seg_prefix_scan_op(leaves[0], start_flags, op)
+            return jax.tree.unflatten(treedef, [out])
+        return seg_prefix_scan(self._sweep_monoid(), start_flags, lifted)
 
     # -- state -------------------------------------------------------------
 
@@ -642,11 +671,11 @@ class KeyedWindowStore:
         n_seg = b - a + 1
 
         # Reclaimed slots are handled GATHER-side: every read of a
-        # newly-admitted key's old lanes is masked to the identity instead
-        # of a full-(slots, h) reset pass — the previous tenant's values
-        # never leak, and per-chunk work stays O(C·h).  (Every admitted head
-        # also lands a scatter below, so no reclaimed slot keeps stale
-        # ``last``/``n_seen``.)
+        # newly-admitted key's old lanes is masked/ignored at the read
+        # instead of a full-(slots, h) reset pass — the previous tenant's
+        # values never leak, and per-chunk work stays O(C·h).  (Every
+        # admitted head also lands a scatter below, so no reclaimed slot
+        # keeps stale ``last``/``n_seen``.)
         #
         # All carry history comes through ONE (C, h) row gather (``crows``)
         # so the donated (slots, h) buffer has exactly two uses — that
@@ -656,21 +685,60 @@ class KeyedWindowStore:
         # the in-place scatter, and copy-insertion materializes full
         # (slots, h) copies that put the K-cliff right back.
 
-        # -- lift + intra-chunk variable-span folds ------------------------
+        # -- lift + intra-chunk window folds: the flip sweep ---------------
+        # Per-row spans [max(a, j-W+1), j] have monotone starts AND ends
+        # within each segment — the flip invariant
+        # (:mod:`repro.core.event_time` module docstring).  Cutting each
+        # segment into W-aligned blocks (boundary at p % W == 0) makes every
+        # span exact as suffix-scan-left-of-boundary ⊗
+        # prefix-scan-right-of-boundary: with p = qW + r, the span start
+        # max(a, j-W+1) lands at the block start a+qW when r = W-1 or p < W
+        # (prefix alone suffices) and strictly inside block q-1 otherwise
+        # (its block-suffix ends exactly at the boundary).  O(1) ⊗/row —
+        # replaces the old O(log W) per-row doubling range fold.
         lifted = _mask_tree(jax.vmap(m.lift)(xss), row_ok, ident)
         starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
-        intra = self._range_fold(m, lifted, starts, idx)
+        m_sweep = self._sweep_monoid()
+        if self.use_inverse:
+            intra = range_fold_invertible(m_sweep, lifted, starts, idx)
+        else:
+            # invalid rows are their own single-row segments (their lifted
+            # rows are already identity), so garbage never crosses them
+            bstart = seg_head | ~vs | (row_ok & (p % W == 0))
+            bpref = self._seg_pscan(bstart, lifted)
+            if W > C:
+                # a chunk can't wrap a block: every span starts at its
+                # segment head, the prefix scan alone is exact
+                intra = bpref
+            else:
+                bend = seg_end | ~vs | (row_ok & (p % W == W - 1))
+                bsuf = self._seg_scan(bend, lifted)
+                cellstart = jax.lax.associative_scan(
+                    jnp.maximum, jnp.where(bstart, idx, 0)
+                )
+                left = _take0(bsuf, jnp.clip(starts, 0, C - 1))
+                both = m_sweep.combine(left, bpref)  # older operand LEFT
+                intra = _where_rows(starts >= cellstart, bpref, both)
 
         if h > 0:
-            crows = _mask_tree(
-                jax.tree.map(lambda cl: cl[cslot], state["carry"]),
-                ~row_new,
-                ident,
+            # the ONE donated-buffer read: a contiguous (C, h) row gather;
+            # the refresh's shifted lanes t + n_seg and the warm-prefix lane
+            # min(p, h-1) are take_along_axis views of the gathered copy.
+            # (A single fused (C, h+1) 2-D lane gather straight off the
+            # donated buffer benchmarked ~15% slower — random (row, lane)
+            # addressing loses to contiguous row copies; two independent
+            # reads of the donated buffer break in-place donation outright.)
+            # row_new rows' garbage is masked at every consumer (the
+            # need_carry select below / the refresh's ``old_m`` mask).
+            t_ax = jnp.arange(h, dtype=jnp.int32)
+            old_t = jnp.clip(t_ax[None, :] + n_seg[:, None], 0, h - 1)
+            crows = jax.tree.map(lambda cl: cl[cslot], state["carry"])
+            old = jax.tree.map(
+                lambda cr: jnp.take_along_axis(
+                    cr, old_t.reshape((C, h) + (1,) * (cr.ndim - 2)), axis=1
+                ),
+                crows,
             )
-
-        # -- warm prefix: windows reaching into the key's history ----------
-        if h > 0:
-            need_carry = row_ok & (p < h) & ~row_new
             pidx = jnp.clip(p, 0, h - 1)[:, None]
             cvals = jax.tree.map(
                 lambda cr: jnp.take_along_axis(
@@ -678,6 +746,10 @@ class KeyedWindowStore:
                 )[:, 0],
                 crows,
             )
+
+        # -- warm prefix: windows reaching into the key's history ----------
+        if h > 0:
+            need_carry = row_ok & (p < h) & ~row_new
             warmed = m.combine(cvals, intra)
             ys = _where_rows(need_carry, warmed, intra)
         else:
@@ -685,20 +757,17 @@ class KeyedWindowStore:
         ys = _mask_tree(ys, row_ok, ident)
 
         # -- refreshed carries: ONE batched (C, h) scatter -----------------
+        # Entry t of a head's refreshed carry folds the slot's trailing
+        # h - t elements: a pure segment suffix when that fits in the chunk
+        # (``from_chunk``), else surviving old-carry lane t + n_seg extended
+        # by the whole-segment fold.  (A "fused" two-gather variant with the
+        # whole-segment fold folded into the from_chunk gather via index
+        # clamping benchmarked ~2.3× SLOWER here: the broadcast ``whole``
+        # fuses into the select for free, a second data-dependent (C, h)
+        # gather does not.)
         if h > 0:
             ss = self._seg_scan(seg_end, lifted)
-            t_ax = jnp.arange(h, dtype=jnp.int32)
-            need = h - t_ax  # trailing elements carry entry t must fold
-            in_chunk = need[None, :] <= n_seg[:, None]  # (C, h)
-            src = jnp.clip(b[:, None] - need[None, :] + 1, 0, C - 1)
-            from_chunk = jax.tree.map(lambda s_: s_[src], ss)
-            old_t = jnp.clip(t_ax[None, :] + n_seg[:, None], 0, h - 1)
-            old = jax.tree.map(
-                lambda cr: jnp.take_along_axis(
-                    cr, old_t.reshape((C, h) + (1,) * (cr.ndim - 2)), axis=1
-                ),
-                crows,
-            )
+            old_m = _mask_tree(old, ~row_new, ident)
             whole = jax.tree.map(
                 lambda s_: jnp.broadcast_to(
                     s_[jnp.clip(a, 0, C - 1)][:, None],
@@ -706,18 +775,49 @@ class KeyedWindowStore:
                 ),
                 ss,
             )
-            carried = m.combine(old, whole)
-            new_carry = jax.tree.map(
-                lambda fc, cd: jnp.where(_bc(in_chunk, fc), fc, cd),
+            carried = m.combine(old_m, whole)
+            # Static lane split: entry t folds need = h - t trailing
+            # elements and a C-row chunk holds n_seg <= C of them, so only
+            # the last min(h, C) lanes can ever take the ``from_chunk``
+            # branch — the data-dependent gather + select is skipped
+            # entirely on the h - min(h, C) leading lanes (3/4 of the
+            # refresh at W=4096, C=1024).
+            hc = min(h, C)
+            h0 = h - hc
+            need = h - t_ax[h0:]  # (hc,) trailing elements entry t folds
+            in_chunk = need[None, :] <= n_seg[:, None]  # (C, hc)
+            src = jnp.clip(b[:, None] - need[None, :] + 1, 0, C - 1)
+            from_chunk = jax.tree.map(lambda s_: s_[src], ss)
+            new_tail = jax.tree.map(
+                lambda fc, cd: jnp.where(_bc(in_chunk, fc), fc, cd[:, h0:]),
                 from_chunk,
                 carried,
             )
             head_scat = jnp.where(seg_head & row_ok, slot, S)
-            carry1 = jax.tree.map(
-                lambda cl, nv: cl.at[head_scat].set(nv, mode="drop"),
-                state["carry"],
-                new_carry,
-            )
+            if h0:
+                # two scatters into disjoint lane ranges instead of a
+                # concatenated (C, h) update: the leading-lane write streams
+                # ``carried`` directly, no 16MB concat materialization
+                carry1 = jax.tree.map(
+                    lambda cl, cd: cl.at[head_scat, :h0].set(
+                        cd[:, :h0], mode="drop"
+                    ),
+                    state["carry"],
+                    carried,
+                )
+                carry1 = jax.tree.map(
+                    lambda cl, nt: cl.at[head_scat, h0:].set(
+                        nt, mode="drop"
+                    ),
+                    carry1,
+                    new_tail,
+                )
+            else:
+                carry1 = jax.tree.map(
+                    lambda cl, nt: cl.at[head_scat].set(nt, mode="drop"),
+                    state["carry"],
+                    new_tail,
+                )
         else:
             head_scat = jnp.where(seg_head & row_ok, slot, S)
             carry1 = state["carry"]

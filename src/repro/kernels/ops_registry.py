@@ -9,7 +9,10 @@ An *op* here is a scalar (elementwise) associative combine with a constant
 identity — the subset of :mod:`repro.core.monoids` that maps 1:1 onto VPU
 lanes.  Pytree-valued monoids (mean, m4, affine, ...) cannot use the scalar
 kernels; they go through the generic ``associative_scan`` path of the
-chunked engine instead.
+chunked engine instead.  :func:`op_for_monoid` is the structural gate: the
+keyed flip sweep routes BOTH halves (``seg_scan``'s segmented suffix and
+prefix kernels) through it, falling back to the lax pair-operator scans for
+pytree aggregates.
 """
 
 from __future__ import annotations

@@ -36,3 +36,22 @@ def seg_suffix_scan_ref(x: jax.Array, flags: jax.Array, *, op: str = "sum"):
     init = jnp.full(xs.shape[1:], ident, x.dtype)
     _, ys = jax.lax.scan(step, init, (xs, fs), reverse=True)
     return jnp.moveaxis(ys, 0, -1)
+
+
+def seg_prefix_scan_ref(x: jax.Array, flags: jax.Array, *, op: str = "sum"):
+    """``out[..., t] = x[..., s(t)] ⊗ … ⊗ x[..., t]`` along the last axis;
+    ``flags`` marks segment starts (``s(t)`` = last True at or before t).
+    Forward sequential scan — the carry (older) operand stays LEFT."""
+    comb = combine_fn(op)
+    ident = identity_for(op, x.dtype)
+    xs = jnp.moveaxis(jnp.asarray(x), -1, 0)
+    fs = jnp.moveaxis(jnp.asarray(flags, bool), -1, 0)
+
+    def step(carry, inp):
+        xv, fl = inp
+        out = jnp.where(fl, xv, comb(carry, xv))
+        return out, out
+
+    init = jnp.full(xs.shape[1:], ident, x.dtype)
+    _, ys = jax.lax.scan(step, init, (xs, fs))
+    return jnp.moveaxis(ys, 0, -1)

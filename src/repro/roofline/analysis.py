@@ -242,9 +242,12 @@ def keyed_update_cost(
         (C,) key lane plus a handful of (C,) index/mask lanes;
       * directory probing: one ``(C, probes)`` int32 gather;
       * carry traffic: ONE (C, h) row gather + ONE (C, h) batched scatter;
-      * range-fold doubling table: ``log2(W)`` levels built and queried;
-      * segmented suffix scan: ``log2(C)`` pair-operator passes over
-        (value, flag) lanes.
+      * segmented two-stacks flip sweep: TWO segmented pair-operator scans
+        (block prefix + block suffix, ``log2(C)`` passes each) — the
+        constant-combine replacement for the retired ``log2(W)`` doubling
+        range-fold table, so per-chunk cost no longer carries a term that
+        grows with the window;
+      * refresh suffix scan: one more ``log2(C)`` pair-operator pass.
 
     Returns ``{"bytes_per_chunk", "t_memory", "items_per_s_bound", "bw",
     "backend"}``.  The bound is what a perfectly-fused implementation
@@ -262,20 +265,81 @@ def keyed_update_cost(
     C = int(chunk)
     h = max(int(window) - 1, 0)
     lg_c = max(math.ceil(math.log2(max(C, 2))), 1)
-    lg_w = max(math.ceil(math.log2(max(window, 2))), 1)
 
     b_sort = 2.0 * C * 4 * lg_c                 # argsort passes (int32 keys)
     b_lanes = 10.0 * C * 4                      # segment/index/mask lanes
     b_probe = C * probes * 4.0                  # directory gather
     b_carry = 2.0 * C * h * value_bytes         # row gather + batched scatter
-    b_rfold = 3.0 * C * lg_w * value_bytes      # doubling table build+query
-    b_sscan = 3.0 * C * lg_c * (value_bytes + 4)  # pair-op scan (val+flag)
-    total = b_sort + b_lanes + b_probe + b_carry + b_rfold + b_sscan
+    # flip sweep (block prefix + block suffix) + refresh suffix scan: three
+    # segmented pair-op scans, constant in W (the log2(W) doubling-table
+    # term is retired)
+    b_sscan = 3.0 * 3.0 * C * lg_c * (value_bytes + 4)
+    total = b_sort + b_lanes + b_probe + b_carry + b_sscan
     t_mem = total / bw
     return {
         "bytes_per_chunk": total,
         "t_memory": t_mem,
         "items_per_s_bound": C / t_mem if t_mem > 0 else 0.0,
+        "bw": bw,
+        "backend": backend,
+    }
+
+
+def eventtime_release_cost(
+    chunk: int,
+    capacity: int,
+    *,
+    value_bytes: int = 4,
+    batch: int = 1,
+    backend: Optional[str] = None,
+) -> dict:
+    """Memory-bound roofline for one event-time ``process_chunk`` dispatch.
+
+    Models the steady-state traffic of
+    :class:`repro.core.event_time.EventTimeChunkedStream` per chunk of P
+    released rows merged into a W-row window (``M = W + P`` merged
+    positions, ``batch`` value lanes per position):
+
+      * chunk sort + searchsorted passes: ``~log2`` passes over (P,) lanes;
+      * merge gather dual: merged timestamps + aggregates assembled by two
+        position gathers (no scatters — see the module docstring);
+      * flip boundary orbit: gather-only binary lifting, ``log2(M)``
+        levels of (M,) int32 hops;
+      * flip sweep: segmented suffix + running prefix ``associative_scan``
+        over (M,) pair lanes — constant combines per element, NO term
+        grows with the horizon (the retired table paid ``log2(W + C)``
+        per element);
+      * eviction re-gather of the W-row window.
+
+    Same return shape as :func:`keyed_update_cost`; ``items_per_s_bound``
+    counts P·batch items per dispatch.
+    """
+    import math
+
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    bw = BACKEND_EFF_BW.get(backend, BACKEND_EFF_BW["cpu"])
+    P = int(chunk)
+    W = int(capacity)
+    M = W + P
+    vb = value_bytes * max(int(batch), 1)
+    lg_p = max(math.ceil(math.log2(max(P, 2))), 1)
+    lg_m = max(math.ceil(math.log2(max(M, 2))), 1)
+
+    b_sort = 2.0 * P * 4 * lg_p                # chunk sort + searchsorted
+    b_merge = 3.0 * M * (vb + 4)               # gather-dual ts+agg assembly
+    b_orbit = 2.0 * M * 4 * lg_m               # binary-lifting hop levels
+    b_sweep = 4.0 * M * (vb + 4)               # seg suffix + prefix scans
+    b_evict = 2.0 * W * (vb + 4)               # window re-gather
+    total = b_sort + b_merge + b_orbit + b_sweep + b_evict
+    t_mem = total / bw
+    items = P * max(int(batch), 1)
+    return {
+        "bytes_per_chunk": total,
+        "t_memory": t_mem,
+        "items_per_s_bound": items / t_mem if t_mem > 0 else 0.0,
         "bw": bw,
         "backend": backend,
     }

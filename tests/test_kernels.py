@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.local_attention.ops import local_attention
-from repro.kernels.seg_scan.ops import seg_suffix_scan_op
-from repro.kernels.seg_scan.ref import seg_suffix_scan_ref
+from repro.kernels.seg_scan.ops import seg_prefix_scan_op, seg_suffix_scan_op
+from repro.kernels.seg_scan.ref import seg_prefix_scan_ref, seg_suffix_scan_ref
 from repro.kernels.sliding_window.ops import sliding_window_agg
 from repro.kernels.sliding_window.ref import sliding_window_ref
 from repro.kernels.suffix_scan.ops import suffix_scan
@@ -119,6 +119,55 @@ def test_seg_suffix_scan_no_ends_is_plain_suffix_scan():
     y = seg_suffix_scan_op(x, jnp.zeros((2, 100), bool), "sum", block_t=32)
     yu = suffix_scan(x, "sum", block_t=32)
     assert float(jnp.abs(y - yu).max()) < 5e-5
+
+
+@pytest.mark.parametrize("op", ["sum", "prod", "max", "logsumexp"])
+@pytest.mark.parametrize("layout", SEG_LAYOUTS)
+@pytest.mark.parametrize("B,T,bt", [(4, 64, 16), (3, 100, 32), (1, 7, 256)])
+def test_seg_prefix_scan_vs_ref(op, layout, B, T, bt):
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    f = _seg_flags(layout, B, T)  # reused as segment-START flags here
+    y = seg_prefix_scan_op(x, f, op, block_t=bt)
+    yr = seg_prefix_scan_ref(x, f, op=op)
+    assert float(jnp.abs(y - yr).max()) < 5e-5
+
+
+@pytest.mark.parametrize("op", ["sum", "max"])
+@pytest.mark.parametrize("layout", SEG_LAYOUTS)
+def test_seg_prefix_scan_vs_lax_fallback(op, layout):
+    """Kernel ≡ the production associative_scan path of core.event_time."""
+    from repro.core import monoids
+    from repro.core.event_time import seg_prefix_scan
+
+    m = {"sum": monoids.sum_monoid, "max": monoids.max_monoid}[op]()
+    B, T = 3, 129
+    x = jnp.asarray(rng.standard_normal((B, T)), jnp.float32)
+    f = _seg_flags(layout, B, T)
+    y = seg_prefix_scan_op(x, f, op, block_t=32)
+    yl = jax.vmap(lambda xi, fi: seg_prefix_scan(m, fi, xi))(x, f)
+    assert float(jnp.abs(y - yl).max()) < 5e-5
+
+
+def test_seg_prefix_scan_int_exact():
+    x = jnp.asarray(rng.integers(-9, 10, (2, 75)), jnp.int32)
+    f = _seg_flags("random", 2, 75)
+    y = seg_prefix_scan_op(x, f, "sum", block_t=16)
+    yr = seg_prefix_scan_ref(x, f, op="sum")
+    assert jnp.array_equal(y, yr)
+
+
+def test_seg_prefix_scan_all_starts_is_identity_map():
+    """Every element starts its own segment → the scan is the input itself."""
+    x = jnp.asarray(rng.standard_normal((2, 40)), jnp.float32)
+    y = seg_prefix_scan_op(x, jnp.ones((2, 40), bool), "sum")
+    assert jnp.array_equal(y, x)
+
+
+def test_seg_prefix_scan_no_starts_is_plain_prefix_scan():
+    """No resets → coincides with the plain cumulative scan."""
+    x = jnp.asarray(rng.standard_normal((2, 100)), jnp.float32)
+    y = seg_prefix_scan_op(x, jnp.zeros((2, 100), bool), "sum", block_t=32)
+    assert float(jnp.abs(y - jnp.cumsum(x, axis=1)).max()) < 5e-5
 
 
 def test_suffix_scan_is_the_flip():

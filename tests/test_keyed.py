@@ -27,9 +27,11 @@ import pytest
 
 from repro.core import daba_lite, monoids
 from repro.core.keyed import (
+    COMBINE_COUNTS,
     KeyDirectory,
     KeyedChunkedStream,
     KeyedWindowStore,
+    reset_combine_counts,
     seg_suffix_scan,
 )
 from repro.core.telemetry import KeyedTelemetry
@@ -109,6 +111,54 @@ def test_keyed_stream_matches_reference(name, window, chunk):
     _, ys = eng.stream(keys, vals)
     ref = per_key_reference(m, keys, _val_list(vals), window)
     assert _tree_equal(ys, ref)
+
+
+@pytest.mark.parametrize("name", ["affine_i32", "m4"])
+@pytest.mark.parametrize("layout", ["giant", "fresh_keys"])
+def test_keyed_flip_sweep_edge_layouts(name, layout):
+    """Flip-sweep edge cases through the full bulk path, non-commutative
+    monoids, ragged final chunk: a single giant segment (every row one key)
+    and every-row-a-new-key (C singleton segments per chunk), for both
+    the W ≤ C (suffix+prefix) and W > C (prefix-only) sweep regimes."""
+    make, gen = MONOID_CASES[name]
+    m = make()
+    T = 90  # chunk=32 → ragged 26-row final chunk
+    if layout == "giant":
+        keys = np.zeros(T, dtype=np.int32)
+        slots = 4
+    else:
+        keys = np.arange(T, dtype=np.int32)
+        slots = T + 2
+    vals = gen(T)
+    for window in (4, 48):
+        eng = KeyedChunkedStream(m, window, slots=slots, chunk=32)
+        _, ys = eng.stream(keys, vals)
+        ref = per_key_reference(m, keys, _val_list(vals), window)
+        assert _tree_equal(ys, ref), (name, layout, window)
+
+
+def test_keyed_combines_per_element_flat_in_window():
+    """The constant-combine claim, measured at runtime: sweep ⊗-invocations
+    per chunk row do not grow with the window (the retired range-fold table
+    added a log2(W) doubling-table factor).  Counts may DROP once W > C
+    (the suffix half of the flip sweep is statically elided)."""
+    C, K, rounds = 64, 16, 3
+    m = monoids.max_monoid(jnp.int32)  # non-invertible → flip-sweep path
+    keys = jnp.asarray(rng.integers(0, K, C), jnp.int32)
+    xs = _scalar_vals(C)
+    per_row = {}
+    for W in (8, 64, 512):
+        store = KeyedWindowStore(m, W, slots=K, instrument_combines=True)
+        state = store.init_state()
+        state, _, _ = store.update_chunk(state, keys, xs)  # admit + warm
+        reset_combine_counts()
+        for _ in range(rounds):
+            state, _, _ = store.update_chunk(state, keys, xs)
+        jax.effects_barrier()
+        per_row[W] = COMBINE_COUNTS["keyed"] / (rounds * C)
+    assert per_row[8] > 0, per_row  # the instrumentation actually fired
+    assert per_row[64] <= 1.25 * per_row[8], per_row
+    assert per_row[512] <= 1.25 * per_row[8], per_row
 
 
 @pytest.mark.parametrize("name", ["sum_i32", "affine_i32"])

@@ -3,6 +3,14 @@
 Reports (a) exact ⊗-invocations per round — worst case is the paper's
 headline claim — and (b) wall-clock per jitted round.  Expect: Two-Stacks
 variants show rare O(n) spikes (max ≫ p50); DABA/DABA Lite worst ≈ median.
+
+``latency_kll_us`` rows carry the same wall-clock distribution through the
+streaming KLL sketch the live observability layer serves
+(:class:`repro.obs.registry.KLLHistogram` — what ``/metrics`` exposes as
+p50/p95/p99) next to the exact worst case, so the sketch the dashboards
+show is validated against ``np.percentile`` ground truth per PR.  None of
+these rows carries ``items_per_s``; they are informational, never
+regression-gated.
 """
 
 from __future__ import annotations
@@ -10,6 +18,19 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import ALGOS, OPERATORS, count_rounds, pctile_row, time_rounds
+
+
+def kll_row(name: str, lat_s: np.ndarray, scale: float = 1e6) -> str:
+    """Latency row with p50/p95/p99 from the obs KLL sketch plus the exact
+    worst case: ``<name>,p50=..,p95=..,p99=..,worst=..`` (units = us)."""
+    from repro.obs.registry import KLLHistogram
+
+    h = KLLHistogram("bench", quantiles=(0.5, 0.95, 0.99))
+    h.observe_many(np.asarray(lat_s, float) * scale)
+    q = np.asarray(h.quantile_values()).ravel()
+    worst = float(np.asarray(lat_s, float).max() * scale)
+    return (f"{name},p50={q[0]:.2f},p95={q[1]:.2f},p99={q[2]:.2f},"
+            f"worst={worst:.2f}")
 
 
 def _flatfit_counts(op_name, window, rounds):
@@ -54,6 +75,7 @@ def main(window=2**12, rounds=1500, operators=("sum", "geomean", "bloom")):
                 continue
             lat = time_rounds(algo, OPERATORS[op_name](), window, rounds)
             rows.append(f"latency_wall_us,{op_name},{algo}," + pctile_row("", lat).lstrip(","))
+            rows.append(kll_row(f"latency_kll_us,{op_name},{algo}", lat))
     for r in rows:
         print(r)
     return rows

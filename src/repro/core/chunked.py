@@ -144,6 +144,7 @@ class ChunkedStream:
         use_kernel: bool = True,
         interpret: Optional[bool] = None,
         block_b: int = 8,
+        obs: Optional[Any] = None,
     ):
         self.monoid = monoid
         self.window = int(window)
@@ -157,6 +158,12 @@ class ChunkedStream:
         self.block_b = block_b
         self._jitted_pc = jax.jit(self._process_chunk_impl)
         self._full_masks: dict = {}
+        # obs: repro.obs.registry.ObsConfig — host-side chunk/row counters
+        # only; this engine has no jit-visible instrumentation, so disabled
+        # vs enabled never changes the traced computation
+        self._obs = obs if (obs is not None and obs.enabled) else None
+        self._obs_chunks = 0
+        self._obs_rows = 0
 
     # -- timestamped (event-time) mode -------------------------------------
 
@@ -231,7 +238,27 @@ class ChunkedStream:
         """
         if mask is None:
             mask = self._full_mask(chunk_length(xs))
+        if self._obs is not None:
+            self._obs_chunks += 1
+            self._obs_rows += int(chunk_length(xs))
         return self._jitted_pc(carry, xs, mask)
+
+    def attach_obs(self, registry, *, prefix: str = "repro_chunked"):
+        """Register host-side throughput counters with an obs registry
+        (rates come from scrape deltas, e.g. in the dashboard)."""
+        registry.describe(f"{prefix}_chunks_total", "counter",
+                          "process_chunk dispatches")
+        registry.describe(f"{prefix}_rows_total", "counter",
+                          "chunk rows ingested (incl. ragged-final padding)")
+
+        def collect():
+            return {
+                f"{prefix}_chunks_total": self._obs_chunks,
+                f"{prefix}_rows_total": self._obs_rows,
+            }
+
+        registry.register_collector(collect)
+        return collect
 
     def chunk_fn(self, carry: PyTree, xs: PyTree, mask=None):
         """Unjitted :meth:`process_chunk` body — pure, for composing into a

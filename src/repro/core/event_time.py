@@ -111,6 +111,7 @@ import numpy as np
 from repro.core import swag_base
 from repro.core.monoids import Monoid
 from repro.core.swag_base import chunk_length, tree_index
+from repro.obs import counters as obs_counters
 
 PyTree = Any
 
@@ -265,25 +266,27 @@ def range_fold_invertible(monoid: Monoid, arr: PyTree, starts, ends) -> PyTree:
 # ``instrument_combines=True``): every combine in an instrumented sweep
 # bumps its engine's counter by the number of element-rows it touched — the
 # regression tests assert combines-per-swept-element stays FLAT as the
-# window grows (the constant-combine claim, measured at runtime).  Same
-# pattern as ``repro.core.keyed.ADMISSION_COUNTS``; call
-# ``jax.effects_barrier()`` before reading.
-COMBINE_COUNTS = {"eventtime": 0, "keyed": 0}
+# window grows (the constant-combine claim, measured at runtime).  The
+# counters now live in :mod:`repro.obs.counters` (one home for the
+# effects-barrier-before-read rule); ``COMBINE_COUNTS`` is a thin
+# deprecated alias — the dict surface still works, and barriered reads
+# should go through ``obs_counters.combines.read()``.
+COMBINE_COUNTS = obs_counters.combines
 
 
 def reset_combine_counts() -> None:
-    for k in COMBINE_COUNTS:
-        COMBINE_COUNTS[k] = 0
+    obs_counters.combines.reset()
 
 
 def _count_combines(key: str, n: int) -> None:
-    COMBINE_COUNTS[key] += n
+    obs_counters.combines.bump(key, n)
 
 
 def counting_combines(monoid: Monoid, key: str) -> Monoid:
-    """``monoid`` with a combine that bumps ``COMBINE_COUNTS[key]`` by the
-    static leading-axis length of its operands at every runtime invocation
-    (a ``jax.debug.callback``, so jitted executions are counted too)."""
+    """``monoid`` with a combine that bumps the ``obs.counters.combines``
+    group (key = engine name) by the static leading-axis length of its
+    operands at every runtime invocation (a ``jax.debug.callback``, so
+    jitted executions are counted too)."""
 
     def combine(a, b):
         n = int(chunk_length(a))
@@ -606,6 +609,62 @@ class EventTimeChunkedStream:
     def window_fold(self, state: PyTree) -> PyTree:
         """Aggregate of the live window (pads are identities): (B, ...)."""
         return fold_axis0(self.monoid, state["win_agg"])
+
+    # -- observability -----------------------------------------------------
+
+    def obs_metrics(self, state: PyTree, now=None) -> dict:
+        """Engine health as DEVICE scalars — no host sync here; the obs
+        registry batches the transfer at scrape time.
+
+        ``watermark_lag`` is ``now - wm`` when the caller supplies a
+        processing-time "now" in event-time units, else the engine-internal
+        ``max_ts - wm`` (= ``slack`` in steady state, less before the first
+        chunk fills it).
+        """
+        wm, max_ts = state["wm"], state["max_ts"]
+        lag = (now - wm) if now is not None else (max_ts - wm)
+        return {
+            "watermark": wm,
+            "watermark_lag": lag,
+            "buffer_occupancy":
+                (state["buf_ts"] < self._tmax).sum(dtype=jnp.int32),
+            "window_occupancy":
+                (state["win_ts"] > self._tmin).sum(dtype=jnp.int32),
+            "late_total": state["n_late"],
+            "dropped_total": state["n_dropped"],
+            "overflow_total": state["n_overflow"],
+        }
+
+    def attach_obs(self, registry, get_state, *, prefix: str = "repro_eventtime"):
+        """Register a scrape collector: ``get_state()`` must return the
+        engine's CURRENT state (host-owned, e.g. the variable the caller
+        threads through :meth:`process_chunk` — this engine does not donate,
+        so the reference stays valid)."""
+        names = {
+            "watermark": (f"{prefix}_watermark", "gauge",
+                          "event-time watermark (max_ts - slack)"),
+            "watermark_lag": (f"{prefix}_watermark_lag", "gauge",
+                              "event-time distance max_ts - wm"),
+            "buffer_occupancy": (f"{prefix}_reorder_buffer_occupancy", "gauge",
+                                 "live entries waiting in the reorder buffer"),
+            "window_occupancy": (f"{prefix}_window_occupancy", "gauge",
+                                 "live entries inside the horizon window"),
+            "late_total": (f"{prefix}_late_total", "counter",
+                           "elements that arrived below the published watermark"),
+            "dropped_total": (f"{prefix}_dropped_total", "counter",
+                              "late elements discarded by the drop policy"),
+            "overflow_total": (f"{prefix}_overflow_total", "counter",
+                               "elements lost to reorder-buffer/window overflow"),
+        }
+        for key, (series, typ, help) in names.items():
+            registry.describe(series, typ, help)
+
+        def collect():
+            metrics = self.obs_metrics(get_state())
+            return {names[k][0]: v for k, v in metrics.items()}
+
+        registry.register_collector(collect)
+        return collect
 
     # -- one chunk ---------------------------------------------------------
 

@@ -87,6 +87,7 @@ from repro.core.event_time import (
 )
 from repro.core.monoids import Monoid, _hash_u32
 from repro.core.swag_base import chunk_length
+from repro.obs import counters as obs_counters
 
 __all__ = [
     "KeyDirectory",
@@ -110,17 +111,19 @@ _KEY_SENTINEL = jnp.int32(2**31 - 1)  # masked rows sort last
 # Host-side admission-branch counters (filled only by stores built with
 # ``instrument_admission=True`` — a jax.debug.callback in each branch of the
 # admission cond, so tests can assert the hit branch was actually taken at
-# runtime).  Call jax.effects_barrier() before reading.
-ADMISSION_COUNTS = {"fast": 0, "slow": 0}
+# runtime).  The counters live in :mod:`repro.obs.counters` (one home for
+# the effects-barrier-before-read rule); ``ADMISSION_COUNTS`` is a thin
+# deprecated alias — barriered reads should go through
+# ``obs_counters.admission.read()``.
+ADMISSION_COUNTS = obs_counters.admission
 
 
 def reset_admission_counts() -> None:
-    ADMISSION_COUNTS["fast"] = 0
-    ADMISSION_COUNTS["slow"] = 0
+    obs_counters.admission.reset()
 
 
 def _count_admission(branch: str) -> None:
-    ADMISSION_COUNTS[branch] += 1
+    obs_counters.admission.bump(branch)
 
 
 def _bc(mask, leaf):
@@ -473,7 +476,16 @@ class KeyedWindowStore:
         use_seg_kernel: Optional[bool] = None,
         instrument_admission: bool = False,
         instrument_combines: bool = False,
+        obs: Optional[Any] = None,
     ):
+        # obs: a repro.obs.registry.ObsConfig — the one observability gate.
+        # Disabled (or None) contributes NOTHING to the traced computation
+        # (tests assert jaxpr equality); enabled folds its instrument flags
+        # into the jit-visible hooks below.
+        if obs is not None and obs.enabled:
+            instrument_admission = instrument_admission or obs.instrument_admission
+            instrument_combines = instrument_combines or obs.instrument_combines
+        self.obs = obs if (obs is not None and obs.enabled) else None
         self.monoid = monoid
         self.window = int(window)
         if self.window < 1:
@@ -574,6 +586,18 @@ class KeyedWindowStore:
         slot, found = self.directory.lookup(state["dir"], keys)
         aggs = _take0(state["last"], jnp.clip(slot, 0, self.slots - 1))
         return _mask_tree(aggs, found, self.monoid.identity()), found
+
+    def counters(self, state: PyTree) -> dict:
+        """Store health counters as DEVICE scalars (no host sync — the obs
+        registry batches the transfer at scrape; callers reading directly
+        should ``jax.device_get`` the dict)."""
+        d = state["dir"]
+        return {
+            "n_live": d["n_live"],
+            "n_evicted": d["n_evicted"],
+            "n_failed": d["n_failed"],
+            "n_dropped": state["n_dropped"],
+        }
 
     def expire(self, state: PyTree, now=None) -> PyTree:
         """TTL sweep: evict every key idle longer than ``ttl`` and reset its
@@ -964,6 +988,17 @@ class KeyedChunkedStream:
         self.donate = bool(donate)
         self._jitted: dict = {}
         self._full_masks: dict = {}
+        # obs plumbing (all None/zero when the store's ObsConfig is off —
+        # process_chunk then takes the exact pre-obs code path)
+        self._obs = self.store.obs
+        self._obs_snap: Optional[dict] = None
+        self._obs_chunks = 0
+        self._obs_rows = 0
+        self._trace_stages: dict = {}
+        # ONE async dispatch for the per-chunk scalar snapshot (4 separate
+        # jnp.copy calls measured ~10% off keyed throughput; fused they
+        # disappear into dispatch noise)
+        self._snap_jit = jax.jit(lambda t: jax.tree.map(jnp.copy, t))
 
     def init_state(self) -> PyTree:
         return self.store.init_state()
@@ -994,9 +1029,83 @@ class KeyedChunkedStream:
             else:
                 fn = jax.jit(self.store.update_chunk, **donate)
             self._jitted[key] = fn
-        if ts is None:
-            return fn(state, keys, xs, mask)
-        return fn(state, keys, xs, ts, mask)
+        if self._obs is None:
+            if ts is None:
+                return fn(state, keys, xs, mask)
+            return fn(state, keys, xs, ts, mask)
+        return self._process_chunk_obs(fn, state, keys, xs, ts, mask, C)
+
+    def _process_chunk_obs(self, fn, state, keys, xs, ts, mask, C):
+        """The instrumented dispatch: optional trace span around the call
+        (synced so the duration is real, with roofline-apportioned stage
+        sub-spans), then tiny-scalar snapshot copies for scrape collectors.
+        The copies matter: with donation on, the returned state's buffers
+        die inside the NEXT process_chunk — a collector reading them later
+        would hit deleted buffers."""
+        tr = self._obs.trace
+        if tr is not None:
+            with tr.span("keyed.update_chunk", args={"chunk": C}) as sa:
+                t0 = tr._now_us()
+                out = (fn(state, keys, xs, mask) if ts is None
+                       else fn(state, keys, xs, ts, mask))
+                jax.block_until_ready(out[1])
+                dur = tr._now_us() - t0
+            stages = self._trace_stages.get(C)
+            if stages is None:
+                from repro.roofline.analysis import keyed_update_cost
+
+                stages = self._trace_stages[C] = keyed_update_cost(
+                    C, self.window
+                )["stages"]
+            tr.add_stage_spans("keyed.update_chunk", t0, dur, stages, tid=1)
+        else:
+            out = (fn(state, keys, xs, mask) if ts is None
+                   else fn(state, keys, xs, ts, mask))
+        st, _, info = out
+        self._obs_chunks += 1
+        self._obs_rows += C
+        self._obs_snap = self._snap_jit({
+            "n_live": info["n_live"],
+            "n_evicted": info["n_evicted"],
+            "n_failed": st["dir"]["n_failed"],
+            "n_dropped": st["n_dropped"],
+        })
+        return out
+
+    def attach_obs(self, registry, *, prefix: str = "repro_keyed"):
+        """Register this stream's scrape collector: live/evicted/failed/
+        dropped from the latest chunk's snapshot plus host-side chunk/row
+        throughput counters.  Admission-branch counters ride along globally
+        via ``obs.counters.admission`` (adopted by the default registry)."""
+        series = {
+            "n_live": (f"{prefix}_live_keys", "gauge",
+                       "keys currently resident in the slot pool"),
+            "n_evicted": (f"{prefix}_evictions_total", "counter",
+                          "LRU + TTL evictions since init"),
+            "n_failed": (f"{prefix}_admission_failed_total", "counter",
+                         "admissions abandoned after probe/victim rounds"),
+            "n_dropped": (f"{prefix}_dropped_rows_total", "counter",
+                          "chunk rows dropped by failed admission"),
+        }
+        for key, (name, typ, help) in series.items():
+            registry.describe(name, typ, help)
+        registry.describe(f"{prefix}_chunks_total", "counter",
+                          "update_chunk dispatches")
+        registry.describe(f"{prefix}_rows_total", "counter",
+                          "chunk rows ingested (incl. padding)")
+
+        def collect():
+            out = {
+                f"{prefix}_chunks_total": self._obs_chunks,
+                f"{prefix}_rows_total": self._obs_rows,
+            }
+            if self._obs_snap is not None:
+                for key, (name, _, _) in series.items():
+                    out[name] = self._obs_snap[key]
+            return out
+
+        registry.register_collector(collect)
+        return collect
 
     def query(self, state, keys):
         return self.store.query(state, keys)
@@ -1179,3 +1288,53 @@ class ShardedKeyedStore:
         owner = jnp.asarray(owner)
         idx = jnp.arange(owner.shape[0])
         return jax.tree.map(lambda a_: a_[owner, idx], ys)
+
+    def counters(self, state, *, per_shard: bool = False) -> dict:
+        """MESH-WIDE store counters: ``n_live`` / ``n_evicted`` /
+        ``n_failed`` / ``n_dropped`` summed over every shard (each shard
+        tracks only its own rows; before this rollup the per-shard scalars
+        were the only view — the telemetry blind spot).  Device values; the
+        reduce runs at read time, outside the steady state.  With
+        ``per_shard=True`` the un-summed (shards,) arrays ride along under
+        ``"per_shard"``."""
+        d = state["dir"]
+        shard_vals = {
+            "n_live": d["n_live"],
+            "n_evicted": d["n_evicted"],
+            "n_failed": d["n_failed"],
+            "n_dropped": state["n_dropped"],
+        }
+        out = {k: v.sum() for k, v in shard_vals.items()}
+        if per_shard:
+            out["per_shard"] = shard_vals
+        return out
+
+    def attach_obs(self, registry, get_state, *,
+                   prefix: str = "repro_sharded"):
+        """Register a scrape collector over ``get_state()`` (the caller's
+        current state variable): mesh-wide totals plus per-shard
+        ``{shard="i"}``-labelled series."""
+        series = {
+            "n_live": (f"{prefix}_live_keys", "gauge",
+                       "keys resident across all shards"),
+            "n_evicted": (f"{prefix}_evictions_total", "counter",
+                          "LRU + TTL evictions, all shards"),
+            "n_failed": (f"{prefix}_admission_failed_total", "counter",
+                         "abandoned admissions, all shards"),
+            "n_dropped": (f"{prefix}_dropped_rows_total", "counter",
+                          "rows dropped by failed admission, all shards"),
+        }
+        for key, (name, typ, help) in series.items():
+            registry.describe(name, typ, help)
+
+        def collect():
+            c = self.counters(get_state(), per_shard=True)
+            out = {}
+            for key, (name, _, _) in series.items():
+                out[name] = c[key]
+                for i in range(self.n_shards):
+                    out[f'{name}{{shard="{i}"}}'] = c["per_shard"][key][i]
+            return out
+
+        registry.register_collector(collect)
+        return collect

@@ -66,24 +66,22 @@ def counting(monoid: Monoid):
 
     Only meaningful in eager (non-traced) execution, where our SWAG
     implementations execute exactly the branch the paper's pseudocode would.
-    Returns ``(wrapped_monoid, counter)`` where ``counter.count`` is the
-    number of ⊗-invocations so far and ``counter.reset()`` zeroes it.
+    Returns ``(wrapped_monoid, counter)`` where ``counter`` is a
+    :class:`repro.obs.counters.Counter` — ``counter.count`` is the number of
+    ⊗-invocations so far and ``counter.reset()`` zeroes it.
     """
+    # lazy import: obs.registry imports this module for the KLL sketch, so
+    # the reverse edge must not exist at module load
+    from repro.obs.counters import Counter
 
-    class _Counter:
-        count = 0
-
-        def reset(self):
-            self.count = 0
-
-    counter = _Counter()
+    counter = Counter()
 
     def combine(a, b):
-        counter.count += 1
+        counter.inc()
         return monoid.combine(a, b)
 
     def inverse_front(agg, oldest):
-        counter.count += 1
+        counter.inc()
         return monoid.inverse_front(agg, oldest)
 
     wrapped = dataclasses.replace(

@@ -303,6 +303,59 @@ class WindowedTelemetry:
         mx = float(self._state["eng"]["max_ts"])
         return 0.0 if mx <= tmin else mx
 
+    # -- observability -------------------------------------------------------
+
+    def attach_obs(self, registry, *, prefix: str = "repro_telemetry"):
+        """Register a scrape collector: the lowered windowed value of every
+        metric (``<prefix>_<metric>``, per-lane ``{lane=}`` labels when
+        ``batch > 1``) plus, in event-time mode, the engine health series of
+        :meth:`EventTimeChunkedStream.obs_metrics` (watermark lag, reorder
+        occupancy, overflow).  Device values; the registry batches the host
+        transfer per scrape.  Safe to attach to a live instance — this
+        telemetry engine never donates its state."""
+        for name in self.metrics:
+            registry.describe(f"{prefix}_{name}", "gauge",
+                              f"windowed {name} (lowered)")
+        if self.horizon is not None:
+            for key, typ, help in (
+                ("watermark", "gauge", "current watermark (event time)"),
+                ("watermark_lag", "gauge",
+                 "max observed ts minus watermark"),
+                ("buffer_occupancy", "gauge",
+                 "events held in the reorder buffer"),
+                ("window_occupancy", "gauge",
+                 "events live inside the horizon window"),
+                ("late_total", "counter",
+                 "events that arrived behind the watermark"),
+                ("dropped_total", "counter",
+                 "late events dropped by policy"),
+                ("overflow_total", "counter",
+                 "reorder-buffer overflow force-releases"),
+            ):
+                registry.describe(f"{prefix}_{key}", typ, help)
+
+        def collect():
+            out = {}
+            for name in self.metrics:
+                v = self._lowered[name]
+                leaves = jax.tree.leaves(v)
+                if not leaves:
+                    continue
+                leaf = leaves[0]  # first leaf of structured lowered values
+                if self.batch == 1:
+                    out[f"{prefix}_{name}"] = leaf[0]
+                else:
+                    for lane in range(self.batch):
+                        out[f'{prefix}_{name}{{lane="{lane}"}}'] = leaf[lane]
+            if self.horizon is not None:
+                eng = self._state["eng"]
+                for key, val in self._engine.obs_metrics(eng).items():
+                    out[f"{prefix}_{key}"] = val
+            return out
+
+        registry.register_collector(collect)
+        return collect
+
     # -- keyed (multi-tenant) view ------------------------------------------
 
     @staticmethod
@@ -487,6 +540,33 @@ class KeyedTelemetry:
             "n_failed": int(d["n_failed"]),
             "n_dropped": int(self._state["n_dropped"]),
         }
+
+    # -- observability -------------------------------------------------------
+
+    def attach_obs(self, registry, *, prefix: str = "repro_keyed_telemetry"):
+        """Register a scrape collector for the store health counters
+        (live/evicted/failed keys, dropped rows) as device values — the
+        registry batches the transfer.  Safe on a live instance
+        (``donate=False`` engine: the state reference stays valid)."""
+        series = {
+            "n_live": (f"{prefix}_live_keys", "gauge",
+                       "keys currently holding a slot"),
+            "n_evicted": (f"{prefix}_evictions_total", "counter",
+                          "LRU + TTL evictions since init"),
+            "n_failed": (f"{prefix}_admission_failed_total", "counter",
+                         "abandoned admissions"),
+            "n_dropped": (f"{prefix}_dropped_rows_total", "counter",
+                          "observation rows dropped by failed admission"),
+        }
+        for key, (name, typ, help) in series.items():
+            registry.describe(name, typ, help)
+
+        def collect():
+            c = self._engine.store.counters(self._state)
+            return {name: c[key] for key, (name, _, _) in series.items()}
+
+        registry.register_collector(collect)
+        return collect
 
     # -- checkpoint/restore -------------------------------------------------
 

@@ -1,0 +1,67 @@
+"""Unified observability: counters, metrics registry, exporter, traces.
+
+The spine every engine reports into (ROADMAP: streaming analytics
+service → Prometheus-style endpoint + live dashboard).  Layout:
+
+  counters.py   host counter groups; the ONE home of the
+                effects-barrier-before-read discipline (absorbs the old
+                ``ADMISSION_COUNTS`` / ``COMBINE_COUNTS`` module globals)
+  registry.py   MetricsRegistry (counters/gauges/KLL histograms +
+                collector pulls, ONE host sync per scrape), ObsConfig
+                (the per-engine gate: disabled ⇒ byte-identical jaxpr)
+  exporter.py   /metrics Prometheus text endpoint (stdlib http.server)
+  trace.py      chrome-trace span recorder (Perfetto-loadable), with
+                roofline-apportioned stage sub-spans
+  dashboard.py  terminal live view (throughput, p50/p95/p99, watermark
+                lag, admission rates)
+
+Import cost: this package only pulls numpy + stdlib at import; jax is
+imported lazily inside scrape/drain paths so ``import repro.obs`` stays
+cheap for tooling.
+"""
+
+from repro.obs import counters
+from repro.obs.counters import Counter, CounterGroup, read_all, reset_all
+from repro.obs.registry import (
+    Gauge,
+    HostCounter,
+    KLLHistogram,
+    MetricsRegistry,
+    ObsConfig,
+    default_registry,
+)
+
+__all__ = [
+    "counters",
+    "Counter",
+    "CounterGroup",
+    "read_all",
+    "reset_all",
+    "Gauge",
+    "HostCounter",
+    "KLLHistogram",
+    "MetricsRegistry",
+    "ObsConfig",
+    "default_registry",
+    "MetricsExporter",
+    "TraceRecorder",
+    "Dashboard",
+]
+
+
+def __getattr__(name):
+    # heavier surfaces resolve lazily so `import repro.obs` needs no
+    # http.server / dashboard machinery until asked for
+    if name == "MetricsExporter":
+        from repro.obs.exporter import MetricsExporter
+
+        return MetricsExporter
+    if name == "TraceRecorder":
+        from repro.obs.trace import TraceRecorder
+
+        return TraceRecorder
+    if name == "Dashboard":
+        from repro.obs.dashboard import Dashboard
+
+        return Dashboard
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,155 @@
+"""Host-side counter groups — the ONE home of the effects-barrier-before-read
+discipline.
+
+Engines that need runtime branch/op counts (which ``lax.cond`` branch ran,
+how many ⊗ a sweep really executed) bump these counters from
+``jax.debug.callback`` hooks inside jitted code.  Callbacks are flushed
+asynchronously, so a reader that grabs the Python value races the device —
+EVERY read must be preceded by ``jax.effects_barrier()``.  That rule used to
+be re-stated (and re-forgotten) at every ad-hoc module global
+(``repro.core.keyed.ADMISSION_COUNTS``, ``repro.core.event_time
+.COMBINE_COUNTS``); it now lives in exactly one place: :meth:`CounterGroup
+.read` and :func:`read_all` barrier before touching the values, and the
+metrics registry's scrape path goes through them.
+
+A :class:`CounterGroup` is dict-like on purpose — the legacy globals are
+kept as thin aliases of the groups below, so ``ADMISSION_COUNTS["fast"]``
+keeps working — but new code should use :meth:`bump` / :meth:`read` /
+:meth:`reset`.
+
+This module depends on nothing inside :mod:`repro` (the core engines import
+it at module load; anything heavier would be a cycle).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections.abc import MutableMapping
+from typing import Dict, Iterator, Tuple
+
+
+class Counter:
+    """A single monotone host counter (the eager per-op counting primitive —
+    :func:`repro.core.monoids.counting` hands these out)."""
+
+    __slots__ = ("count",)
+
+    def __init__(self):
+        self.count = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.count += n
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+class CounterGroup(MutableMapping):
+    """Named family of host counters, one label per key.
+
+    ``name`` / ``label`` / ``help`` describe the family for Prometheus
+    exposition (rendered as ``<name>_total{<label>="<key>"}``).  Keys are
+    dynamic: bumping an unseen key creates it at 0 first, so callers never
+    pre-declare.  Mutation is lock-protected — debug callbacks may fire from
+    runtime threads.
+    """
+
+    def __init__(self, name: str, *, label: str = "kind", help: str = "",
+                 keys: Tuple[str, ...] = ()):
+        self.name = name
+        self.label = label
+        self.help = help
+        self._lock = threading.Lock()
+        self._vals: Dict[str, int] = {k: 0 for k in keys}
+
+    # -- the API -----------------------------------------------------------
+
+    def bump(self, key: str, n: int = 1) -> None:
+        with self._lock:
+            self._vals[key] = self._vals.get(key, 0) + n
+
+    def read(self) -> Dict[str, int]:
+        """Barrier-then-snapshot: flushes pending ``jax.debug`` callbacks
+        (the one place the rule is enforced) and returns a plain dict."""
+        _barrier()
+        with self._lock:
+            return dict(self._vals)
+
+    def reset(self) -> None:
+        _barrier()  # drain in-flight bumps so they don't land post-reset
+        with self._lock:
+            for k in self._vals:
+                self._vals[k] = 0
+
+    # -- dict compatibility (the legacy-alias surface) ---------------------
+    # NOTE: plain item access does NOT barrier — it exists so legacy
+    # ``COUNTS["key"]`` reads keep working verbatim (those call sites
+    # already barrier manually).  Prefer read().
+
+    def __getitem__(self, key: str) -> int:
+        with self._lock:
+            return self._vals[key]
+
+    def __setitem__(self, key: str, value: int) -> None:
+        with self._lock:
+            self._vals[key] = int(value)
+
+    def __delitem__(self, key: str) -> None:
+        with self._lock:
+            del self._vals[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(dict(self._vals))
+
+    def __len__(self) -> int:
+        return len(self._vals)
+
+    def __repr__(self) -> str:
+        return f"CounterGroup({self.name!r}, {self._vals!r})"
+
+
+def _barrier() -> None:
+    import jax
+
+    jax.effects_barrier()
+
+
+# ---------------------------------------------------------------------------
+# The system-wide groups (the former module globals, one home)
+# ---------------------------------------------------------------------------
+
+# which admission branch KeyDirectory.admit_heads took per chunk
+# (stores built with instrument_admission=True)
+admission = CounterGroup(
+    "swag_admission_branch",
+    label="branch",
+    help="keyed-store admission dispatches per lax.cond branch "
+         "(fast = all-hit recency bump, slow = batched allocation rounds)",
+    keys=("fast", "slow"),
+)
+
+# runtime ⊗ invocations in the instrumented flip sweeps
+# (engines built with instrument_combines=True)
+combines = CounterGroup(
+    "swag_combines",
+    label="engine",
+    help="monoid combine invocations executed by instrumented flip sweeps, "
+         "weighted by the static row count each combine touched",
+    keys=("eventtime", "keyed"),
+)
+
+GROUPS: Tuple[CounterGroup, ...] = (admission, combines)
+
+
+def read_all() -> Dict[str, Dict[str, int]]:
+    """One barrier, then a snapshot of every system counter group."""
+    _barrier()
+    return {g.name: dict(g._vals) for g in GROUPS}
+
+
+def reset_all() -> None:
+    _barrier()
+    for g in GROUPS:
+        with g._lock:
+            for k in g._vals:
+                g._vals[k] = 0

@@ -1,0 +1,154 @@
+"""Terminal live dashboard over a :class:`MetricsRegistry`.
+
+Renders a compact operator view — throughput, latency quantiles
+(p50/p95/p99 from the KLL summaries), watermark lag, admission-branch
+rates, live keys, drop/evict counters — refreshed in place with ANSI
+escapes.  Counter *rates* are computed from deltas between consecutive
+scrapes, so one ``Dashboard`` instance should own its refresh loop.
+
+Modes:
+
+  * ``run(seconds=…, interval=…)`` — clears and redraws a TTY at
+    ``interval`` (default 1 Hz; one registry scrape per frame);
+  * ``render_once()`` — one plain-text frame, no escapes (``--no-tty`` /
+    CI logs).
+
+The dashboard is a pure registry consumer: it works against any engine
+combination that reports into the registry, locally or scraped over the
+exporter's wire format.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.registry import MetricsRegistry, split_series
+
+_CLEAR = "\x1b[2J\x1b[H"
+_BOLD = "\x1b[1m"
+_DIM = "\x1b[2m"
+_RESET = "\x1b[0m"
+
+
+def _fmt(v: float) -> str:
+    a = abs(v)
+    if a >= 1e9:
+        return f"{v / 1e9:.2f}G"
+    if a >= 1e6:
+        return f"{v / 1e6:.2f}M"
+    if a >= 1e3:
+        return f"{v / 1e3:.2f}k"
+    if a == 0 or a >= 1:
+        return f"{v:.2f}".rstrip("0").rstrip(".")
+    return f"{v:.4g}"
+
+
+class Dashboard:
+    """Scrape → diff → render loop for the terminal."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None, *,
+                 out=None, color: Optional[bool] = None):
+        if registry is None:
+            from repro.obs.registry import default_registry
+
+            registry = default_registry()
+        self.registry = registry
+        self.out = out or sys.stdout
+        self.color = self.out.isatty() if color is None else color
+        self._prev: Optional[Dict[str, float]] = None
+        self._prev_t: float = 0.0
+
+    # -- framing -----------------------------------------------------------
+
+    def _snapshot(self) -> Tuple[Dict[str, float], Dict[str, float]]:
+        """One scrape; returns (samples, counter rates/s vs last frame)."""
+        now = time.perf_counter()
+        cur = self.registry.scrape()
+        rates: Dict[str, float] = {}
+        if self._prev is not None:
+            dt = max(now - self._prev_t, 1e-9)
+            for name, v in cur.items():
+                base, _ = split_series(name)
+                if base.endswith("_total") or base.endswith("_count"):
+                    rates[name] = (v - self._prev.get(name, 0.0)) / dt
+        self._prev, self._prev_t = cur, now
+        return cur, rates
+
+    def _style(self, s: str, code: str) -> str:
+        return f"{code}{s}{_RESET}" if self.color else s
+
+    def compose(self, cur: Dict[str, float],
+                rates: Dict[str, float]) -> str:
+        """One frame of text from a scrape + rate dict."""
+        lines: List[str] = []
+        title = "repro · live engine metrics"
+        lines.append(self._style(title, _BOLD))
+        lines.append(self._style(time.strftime("%H:%M:%S"), _DIM))
+        lines.append("")
+
+        # summaries: group quantile series per family
+        summaries: Dict[str, Dict[str, float]] = {}
+        plain: List[Tuple[str, float]] = []
+        for name, v in sorted(cur.items()):
+            base, labels = split_series(name)
+            if "quantile" in labels:
+                summaries.setdefault(base, {})[labels["quantile"]] = v
+            else:
+                plain.append((name, v))
+        if summaries:
+            lines.append(self._style("latency / distributions", _BOLD))
+            for base, qs in summaries.items():
+                qtxt = "  ".join(
+                    f"p{float(q) * 100:g}={_fmt(v)}"
+                    for q, v in sorted(qs.items(), key=lambda kv: float(kv[0]))
+                )
+                n = cur.get(f"{base}_count", 0.0)
+                r = rates.get(f"{base}_count")
+                rate = f"  {_fmt(r)}/s" if r is not None else ""
+                lines.append(f"  {base:<44} {qtxt}  n={_fmt(n)}{rate}")
+            lines.append("")
+
+        # counters with rates, then gauges
+        ctr = [(n, v) for n, v in plain
+               if split_series(n)[0].endswith(("_total", "_count"))]
+        gau = [(n, v) for n, v in plain
+               if not split_series(n)[0].endswith(
+                   ("_total", "_count", "_sum"))]
+        if ctr:
+            lines.append(self._style("counters", _BOLD))
+            for name, v in ctr:
+                r = rates.get(name)
+                rate = f"  {_fmt(r)}/s" if r is not None else ""
+                lines.append(f"  {name:<52} {_fmt(v):>10}{rate}")
+            lines.append("")
+        if gau:
+            lines.append(self._style("gauges", _BOLD))
+            for name, v in gau:
+                lines.append(f"  {name:<52} {_fmt(v):>10}")
+        return "\n".join(lines)
+
+    # -- drive -------------------------------------------------------------
+
+    def render_once(self) -> str:
+        """One plain frame (also what ``--no-tty`` prints per tick)."""
+        cur, rates = self._snapshot()
+        frame = self.compose(cur, rates)
+        return frame
+
+    def tick(self) -> None:
+        """Scrape and redraw in place (TTY mode)."""
+        frame = self.render_once()
+        if self.color:
+            self.out.write(_CLEAR)
+        self.out.write(frame + "\n")
+        self.out.flush()
+
+    def run(self, seconds: float, interval: float = 1.0) -> None:
+        """Refresh loop for ``seconds`` at ``interval`` (1 Hz default —
+        the attached-overhead acceptance configuration)."""
+        deadline = time.perf_counter() + seconds
+        while time.perf_counter() < deadline:
+            self.tick()
+            time.sleep(interval)

@@ -1,0 +1,112 @@
+"""Prometheus text-exposition endpoint over stdlib ``http.server``.
+
+``MetricsExporter(registry).start()`` serves::
+
+    GET /metrics   → text format 0.0.4 (registry.render(): ONE scrape)
+    GET /healthz   → "ok"
+
+on a daemon thread; ``port=0`` binds an ephemeral port (read ``.port`` /
+``.url`` after ``start()``).  Each ``/metrics`` hit performs exactly one
+registry scrape — a scraper at 1 Hz costs one effects barrier + one batched
+device transfer per second, nothing per event (the acceptance criterion:
+keyed throughput within 10% with the exporter attached).
+
+No dependencies beyond the stdlib; scrape errors return 500 with the
+traceback body instead of killing the serving thread.
+"""
+
+from __future__ import annotations
+
+import threading
+import traceback
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+
+CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+
+class MetricsExporter:
+    """Background HTTP server exposing a :class:`MetricsRegistry`."""
+
+    def __init__(self, registry=None, *, host: str = "127.0.0.1",
+                 port: int = 0):
+        if registry is None:
+            from repro.obs.registry import default_registry
+
+            registry = default_registry()
+        self.registry = registry
+        self.host = host
+        self._requested_port = port
+        self._server: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "MetricsExporter":
+        registry = self.registry
+
+        class Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 (http.server API)
+                if self.path.split("?")[0] == "/healthz":
+                    body = b"ok\n"
+                    self.send_response(200)
+                    self.send_header("Content-Type", "text/plain")
+                    self.send_header("Content-Length", str(len(body)))
+                    self.end_headers()
+                    self.wfile.write(body)
+                    return
+                if self.path.split("?")[0] != "/metrics":
+                    self.send_response(404)
+                    self.end_headers()
+                    return
+                try:
+                    body = registry.render().encode("utf-8")
+                    code, ctype = 200, CONTENT_TYPE
+                except Exception:
+                    body = traceback.format_exc().encode("utf-8")
+                    code, ctype = 500, "text/plain"
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *a):  # quiet: no per-scrape stderr spam
+                pass
+
+        self._server = ThreadingHTTPServer(
+            (self.host, self._requested_port), Handler
+        )
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="obs-exporter", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    # -- address -----------------------------------------------------------
+
+    @property
+    def port(self) -> int:
+        if self._server is None:
+            raise RuntimeError("exporter not started")
+        return self._server.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def __enter__(self) -> "MetricsExporter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

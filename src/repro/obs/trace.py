@@ -1,0 +1,151 @@
+"""Chrome-trace span recorder — Perfetto-loadable timelines of engine work.
+
+Records ``trace_event`` JSON (the chrome://tracing / Perfetto format): "X"
+complete events with microsecond ``ts``/``dur``, grouped by pid/tid.  Load
+the saved file at https://ui.perfetto.dev or chrome://tracing.
+
+Two span flavours:
+
+  * **measured** — :meth:`TraceRecorder.span` wall-clocks a ``with`` block
+    (a chunk step, a decode step, a scrape);
+  * **modeled stage sub-spans** — a single jitted ``update_chunk`` dispatch
+    executes sort→probe→admit→sweep→scatter fused on device, so the host
+    cannot time the stages individually.  :meth:`add_stage_spans` splits a
+    measured parent span *proportionally to the roofline byte model* of
+    :mod:`repro.roofline.analysis` (each stage's share of modeled HBM
+    traffic), attaching ``roofline_frac`` plus the modeled byte count as
+    span args and marking them ``modeled: true``.  The sub-spans show
+    where the memory-bound model says the time goes — they are a model,
+    not a measurement, and are labelled as such.
+
+The recorder is lock-protected (exporter/dashboard threads may flush while
+an engine records) and bounded: beyond ``max_events`` new events are
+dropped and counted, never grown without limit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+
+class TraceRecorder:
+    """Collects chrome trace events; ``save()`` writes Perfetto JSON."""
+
+    def __init__(self, *, process_name: str = "repro", max_events: int = 200_000):
+        self._lock = threading.Lock()
+        self._events: List[Dict[str, Any]] = []
+        self._t0 = time.perf_counter()
+        self._pid = 1
+        self.max_events = max_events
+        self.n_dropped = 0
+        self._emit_meta(process_name)
+
+    def _emit_meta(self, process_name: str) -> None:
+        self._events.append({
+            "name": "process_name", "ph": "M", "pid": self._pid, "tid": 0,
+            "args": {"name": process_name},
+        })
+
+    def _now_us(self) -> float:
+        return (time.perf_counter() - self._t0) * 1e6
+
+    def _push(self, ev: Dict[str, Any]) -> None:
+        with self._lock:
+            if len(self._events) >= self.max_events:
+                self.n_dropped += 1
+                return
+            self._events.append(ev)
+
+    # -- recording ---------------------------------------------------------
+
+    @contextlib.contextmanager
+    def span(self, name: str, *, tid: int = 0,
+             args: Optional[Dict[str, Any]] = None):
+        """Wall-clock a block as an "X" complete event.  Yields a dict the
+        block may mutate to add args after the fact; the event's ts/dur are
+        filled on exit."""
+        extra: Dict[str, Any] = dict(args or {})
+        t0 = self._now_us()
+        try:
+            yield extra
+        finally:
+            t1 = self._now_us()
+            self._push({
+                "name": name, "ph": "X", "pid": self._pid, "tid": tid,
+                "ts": t0, "dur": max(t1 - t0, 0.01), "args": extra,
+            })
+
+    def complete(self, name: str, ts_us: float, dur_us: float, *,
+                 tid: int = 0, args: Optional[Dict[str, Any]] = None) -> None:
+        """Record a complete event with explicit timing (already measured)."""
+        self._push({
+            "name": name, "ph": "X", "pid": self._pid, "tid": tid,
+            "ts": ts_us, "dur": max(dur_us, 0.01), "args": dict(args or {}),
+        })
+
+    def instant(self, name: str, *, tid: int = 0,
+                args: Optional[Dict[str, Any]] = None) -> None:
+        self._push({
+            "name": name, "ph": "i", "s": "t", "pid": self._pid, "tid": tid,
+            "ts": self._now_us(), "args": dict(args or {}),
+        })
+
+    def counter(self, name: str, values: Dict[str, float], *,
+                tid: int = 0) -> None:
+        """A "C" counter event — renders as a stacked area track."""
+        self._push({
+            "name": name, "ph": "C", "pid": self._pid, "tid": tid,
+            "ts": self._now_us(),
+            "args": {k: float(v) for k, v in values.items()},
+        })
+
+    def add_stage_spans(self, parent_name: str, ts_us: float, dur_us: float,
+                        stages: Dict[str, float], *, tid: int = 0,
+                        args: Optional[Dict[str, Any]] = None) -> None:
+        """Model-apportioned sub-spans under a measured parent interval.
+
+        ``stages`` maps stage name → modeled bytes (e.g. the ``stages``
+        dict of :func:`repro.roofline.analysis.keyed_update_cost`).  The
+        parent duration is split proportionally; each sub-span carries
+        ``roofline_frac`` (its share), ``modeled_bytes``, and
+        ``modeled: true`` in args.
+        """
+        total = float(sum(stages.values()))
+        if total <= 0 or dur_us <= 0:
+            return
+        cursor = ts_us
+        shared = dict(args or {})
+        for stage, b in stages.items():
+            frac = float(b) / total
+            d = dur_us * frac
+            self._push({
+                "name": f"{parent_name}/{stage}", "ph": "X",
+                "pid": self._pid, "tid": tid, "ts": cursor,
+                "dur": max(d, 0.01),
+                "args": {"roofline_frac": round(frac, 4),
+                         "modeled_bytes": float(b), "modeled": True,
+                         **shared},
+            })
+            cursor += d
+
+    # -- output ------------------------------------------------------------
+
+    def events(self) -> List[Dict[str, Any]]:
+        with self._lock:
+            return list(self._events)
+
+    def to_json(self) -> Dict[str, Any]:
+        return {"traceEvents": self.events(), "displayTimeUnit": "ms"}
+
+    def save(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+        return path
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._events)

@@ -250,10 +250,13 @@ def keyed_update_cost(
       * refresh suffix scan: one more ``log2(C)`` pair-operator pass.
 
     Returns ``{"bytes_per_chunk", "t_memory", "items_per_s_bound", "bw",
-    "backend"}``.  The bound is what a perfectly-fused implementation
-    hitting effective bandwidth would sustain; ``measured /
+    "backend", "stages"}``.  The bound is what a perfectly-fused
+    implementation hitting effective bandwidth would sustain; ``measured /
     items_per_s_bound`` is the roofline-relative fraction benchmark rows
-    report.
+    report.  ``stages`` maps pipeline stage → modeled bytes (sort / probe /
+    admit / sweep / scatter) — :meth:`repro.obs.trace.TraceRecorder
+    .add_stage_spans` uses it to apportion a measured chunk span into
+    per-stage sub-spans.
     """
     import math
 
@@ -282,6 +285,15 @@ def keyed_update_cost(
         "items_per_s_bound": C / t_mem if t_mem > 0 else 0.0,
         "bw": bw,
         "backend": backend,
+        # hot-path stage names (update_chunk order); carry traffic split
+        # between its gather (admit) and scatter halves
+        "stages": {
+            "sort": b_sort + b_lanes,
+            "probe": b_probe,
+            "admit": b_carry / 2.0,
+            "sweep": b_sscan,
+            "scatter": b_carry / 2.0,
+        },
     }
 
 
@@ -342,6 +354,13 @@ def eventtime_release_cost(
         "items_per_s_bound": items / t_mem if t_mem > 0 else 0.0,
         "bw": bw,
         "backend": backend,
+        "stages": {
+            "sort": b_sort,
+            "merge": b_merge,
+            "orbit": b_orbit,
+            "sweep": b_sweep,
+            "evict": b_evict,
+        },
     }
 
 

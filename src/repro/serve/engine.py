@@ -68,10 +68,25 @@ class DecodeEngine:
         telemetry_window: int = 128,
         telemetry_horizon: Optional[float] = 30.0,
         request_telemetry_slots: Optional[int] = None,
+        obs=None,
     ):
         self.cfg = cfg
         self.params = params
         self.B = batch_slots
+        # obs: repro.obs.registry.ObsConfig — the serve step already pays a
+        # host sync per decode step (decode_ms is a host float), so the obs
+        # hook is a free host-side histogram append + counters; disabled
+        # changes nothing in the traced computation
+        self._obs = obs if (obs is not None and obs.enabled) else None
+        self._obs_hist = None
+        self._obs_steps = 0
+        self._obs_tokens = 0
+        if self._obs is not None:
+            reg = self._obs.resolved_registry()
+            self._obs_hist = reg.histogram(
+                "repro_serve_decode_ms", "decode-step latency (ms)",
+            )
+            self.attach_obs(reg)
         # per-slot windowed serve stats: one B-lane product-monoid state,
         # one jitted dispatch per engine step.  Default is an EVENT-TIME
         # window (``telemetry_horizon`` seconds, each step observed at its
@@ -131,6 +146,7 @@ class DecodeEngine:
         self.slot_remaining = np.zeros(batch_slots, np.int32)
         self.queue: list[Request] = []
         self.retired: list[Request] = []  # finished since last drain
+        self.retired_count = 0  # finished since engine start (monotone)
         self.cur_tok = jnp.zeros((batch_slots,), jnp.int32)
         self._decode = jax.jit(self.model.decode_step)
         # single-slot prefill (B=1 spec) + scatter into the batch state
@@ -185,6 +201,15 @@ class DecodeEngine:
         self.cur_tok = nxt
         nxt_np = np.asarray(nxt)  # host sync: the decode step is complete
         decode_ms = (time.perf_counter() - t0) * 1e3
+        if self._obs is not None:
+            self._obs_hist.observe(decode_ms)
+            self._obs_steps += 1
+            self._obs_tokens += len(active)
+            tr = self._obs.trace
+            if tr is not None:
+                tr.complete("serve.decode_step", tr._now_us() - decode_ms * 1e3,
+                            decode_ms * 1e3, tid=2,
+                            args={"active_slots": len(active)})
         rid_by_slot = {i: self.slot_req[i].rid for i in active}
         retired_mask = np.zeros(self.B, np.float32)
         for i in active:
@@ -196,6 +221,7 @@ class DecodeEngine:
                 req.done = True
                 self.slot_req[i] = None
                 self.retired.append(req)
+                self.retired_count += 1
                 retired_mask[i] = 1.0
         active_mask = np.zeros(self.B, np.float32)
         active_mask[active] = 1.0
@@ -239,6 +265,42 @@ class DecodeEngine:
             if n == 0 and not self.queue:
                 break
         return done
+
+    # -- observability -----------------------------------------------------
+
+    def attach_obs(self, registry, *, prefix: str = "repro_serve"):
+        """Register the serve scrape collector: engine step/token counters,
+        live slot occupancy, queue depth, retired requests, telemetry
+        overflow.  (The decode-ms KLL summary registers separately as
+        ``repro_serve_decode_ms`` when the engine is built with ``obs=``.)"""
+        registry.describe(f"{prefix}_steps_total", "counter",
+                          "decode engine steps")
+        registry.describe(f"{prefix}_tokens_total", "counter",
+                          "tokens decoded across all slots")
+        registry.describe(f"{prefix}_active_slots", "gauge",
+                          "slots decoding this step")
+        registry.describe(f"{prefix}_queue_depth", "gauge",
+                          "requests waiting for a slot")
+        registry.describe(f"{prefix}_retired_total", "counter",
+                          "requests finished since engine start")
+        registry.describe(f"{prefix}_telemetry_overflow_total", "counter",
+                          "telemetry steps lost to window capacity")
+
+        def collect():
+            return {
+                f"{prefix}_steps_total": self._obs_steps,
+                f"{prefix}_tokens_total": self._obs_tokens,
+                f"{prefix}_active_slots": sum(
+                    r is not None for r in self.slot_req
+                ),
+                f"{prefix}_queue_depth": len(self.queue),
+                f"{prefix}_retired_total": self.retired_count,
+                f"{prefix}_telemetry_overflow_total":
+                    self._telem.overflow_count(),
+            }
+
+        registry.register_collector(collect)
+        return collect
 
     # -- windowed serve telemetry -----------------------------------------
 

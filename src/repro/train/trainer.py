@@ -73,6 +73,7 @@ class Trainer:
         stream: SyntheticStream,
         jit_fn: Callable = jax.jit,
         failure_injector: Optional[FailureInjector] = None,
+        obs=None,
     ):
         self.cfg = cfg
         self.tcfg = tcfg
@@ -83,6 +84,22 @@ class Trainer:
             tcfg.metric_window, horizon=tcfg.metric_horizon
         )
         self.straggler_events: list[int] = []
+        # obs: repro.obs.registry.ObsConfig — the loop already blocks on the
+        # loss each step, so the hooks are free host-side appends; disabled
+        # leaves the jitted step untouched either way
+        self._obs = obs if (obs is not None and obs.enabled) else None
+        self._obs_hist = None
+        if self._obs is not None:
+            reg = self._obs.resolved_registry()
+            self._obs_hist = reg.histogram(
+                "repro_train_step_ms", "train-step wall time (ms)"
+            )
+            self._obs_loss = reg.gauge("repro_train_loss", "latest step loss")
+            self._obs_step = reg.gauge("repro_train_step", "current step")
+            self._obs_stragglers = reg.counter(
+                "repro_train_stragglers",
+                "steps whose duration z-score exceeded the threshold",
+            )
         self._step_fn = jit_fn(make_train_step(
             cfg, optimizer, tcfg.compress_grads,
             metric_horizon=tcfg.metric_horizon,
@@ -133,9 +150,20 @@ class Trainer:
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             step = int(state.step)
-            if self.time_window.is_straggler(dt, self.tcfg.straggler_z):
+            straggler = self.time_window.is_straggler(dt, self.tcfg.straggler_z)
+            if straggler:
                 self.straggler_events.append(step)
                 log.warning("straggler step %d: %.3fs", step, dt)
+            if self._obs is not None:
+                self._obs_hist.observe(dt * 1e3)
+                self._obs_step.set(step)
+                self._obs_loss.set(float(metrics["loss"]))
+                if straggler:
+                    self._obs_stragglers.inc()
+                tr = self._obs.trace
+                if tr is not None:
+                    tr.complete("train.step", tr._now_us() - dt * 1e6,
+                                dt * 1e6, tid=3, args={"step": step})
             if step % self.tcfg.log_every == 0:
                 rec = {k: float(v) for k, v in metrics.items()}
                 rec["step"] = step

@@ -182,3 +182,61 @@ def test_sharded_train_step_matches_single_device():
     )
     assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2000:])
     assert "OK" in r.stdout
+
+
+_SUBPROCESS_SHARDED_COUNTERS = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import monoids
+    from repro.core.keyed import ShardedKeyedStore, shard_of_key
+    from repro.obs.registry import MetricsRegistry
+
+    mesh = jax.make_mesh((4,), ("data",))
+    # slots_per_shard=4 with a 256-key universe: every shard is saturated,
+    # evicting constantly and dropping rows whose chunk-local distinct-key
+    # count overflows the tiny directory
+    sh = ShardedKeyedStore(monoids.sum_monoid(jnp.int32), window=4,
+                           slots_per_shard=4, mesh=mesh)
+    state = sh.init_state()
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        keys = jnp.asarray(rng.integers(0, 256, 64), jnp.int32)
+        xs = jnp.ones(64, jnp.int32)
+        state, ys, owner = sh.update_chunk(state, keys, xs)
+
+    c = jax.device_get(sh.counters(state, per_shard=True))
+    # the mesh-wide rollup must equal the per-shard sums, per counter
+    for k in ("n_live", "n_evicted", "n_failed", "n_dropped"):
+        assert int(c[k]) == int(np.sum(c["per_shard"][k])), (k, c)
+    assert c["per_shard"]["n_live"].shape == (4,)
+    assert int(c["n_live"]) == 16, c            # all 4x4 slots saturated
+    assert int(c["n_evicted"]) > 0, c           # universe >> slots
+    assert all(int(v) > 0 for v in c["per_shard"]["n_evicted"]), c
+
+    # attach_obs: one scrape serves the rollup AND {shard="i"} series
+    reg = MetricsRegistry()
+    sh.attach_obs(reg, lambda: state)
+    snap = reg.scrape()
+    assert snap["repro_sharded_live_keys"] == 16, snap
+    per = [snap['repro_sharded_evictions_total{shard="%d"}' % i]
+           for i in range(4)]
+    assert sum(per) == snap["repro_sharded_evictions_total"], (per, snap)
+    print("OK", int(c["n_evicted"]), int(c["n_dropped"]))
+    """
+)
+
+
+def test_sharded_keyed_counters_rollup_4dev():
+    """Mesh-wide counter rollup over a 4-shard keyed store: the summed
+    totals equal the per-shard values, and the obs collector exposes both
+    (the pre-PR-8 blind spot: only shard-local scalars existed)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SHARDED_COUNTERS],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd=__import__("os").path.dirname(__import__("os").path.dirname(__file__)),
+    )
+    assert r.returncode == 0, (r.stdout[-800:], r.stderr[-2000:])
+    assert "OK" in r.stdout

@@ -19,7 +19,6 @@ import jax.numpy as jnp
 from repro.core import daba_lite, monoids, swag_base
 from repro.core.chunked import ChunkedStream
 from repro.core.event_time import (
-    COMBINE_COUNTS,
     EventTimeChunkedStream,
     TimestampedWindow,
     flip_range_fold,
@@ -27,9 +26,9 @@ from repro.core.event_time import (
     in_order_reference,
     range_fold,
     range_fold_invertible,
-    reset_combine_counts,
 )
 from repro.data.stream import DisorderedEventStream
+from repro.obs import counters as obs_counters
 
 rng = np.random.default_rng(7)
 
@@ -472,12 +471,14 @@ def test_eventtime_combines_per_position_flat_in_horizon():
             monoids.max_monoid(), horizon, slack=0.0, chunk=chunk,
             capacity=cap, buffer=buffer, instrument_combines=True,
         )
-        reset_combine_counts()
+        obs_counters.combines.reset()
         eng.stream(jnp.asarray(ts), xs)
-        jax.effects_barrier()
         # each chunk sweeps M = capacity + buffer + chunk merge positions;
         # the chunk count is identical across horizons, so it cancels
-        per_pos[horizon] = COMBINE_COUNTS["eventtime"] / (cap + buffer + chunk)
+        # (read() runs effects_barrier before snapshotting)
+        per_pos[horizon] = (
+            obs_counters.combines.read()["eventtime"] / (cap + buffer + chunk)
+        )
     lo, hi = min(per_pos.values()), max(per_pos.values())
     assert lo > 0, per_pos  # the instrumentation actually fired
     assert hi <= 1.5 * lo, per_pos

@@ -27,14 +27,13 @@ import pytest
 
 from repro.core import daba_lite, monoids
 from repro.core.keyed import (
-    COMBINE_COUNTS,
     KeyDirectory,
     KeyedChunkedStream,
     KeyedWindowStore,
-    reset_combine_counts,
     seg_suffix_scan,
 )
 from repro.core.telemetry import KeyedTelemetry
+from repro.obs import counters as obs_counters
 
 rng = np.random.default_rng(0)
 
@@ -151,11 +150,11 @@ def test_keyed_combines_per_element_flat_in_window():
         store = KeyedWindowStore(m, W, slots=K, instrument_combines=True)
         state = store.init_state()
         state, _, _ = store.update_chunk(state, keys, xs)  # admit + warm
-        reset_combine_counts()
+        obs_counters.combines.reset()
         for _ in range(rounds):
             state, _, _ = store.update_chunk(state, keys, xs)
-        jax.effects_barrier()
-        per_row[W] = COMBINE_COUNTS["keyed"] / (rounds * C)
+        # read() runs jax.effects_barrier() before snapshotting
+        per_row[W] = obs_counters.combines.read()["keyed"] / (rounds * C)
     assert per_row[8] > 0, per_row  # the instrumentation actually fired
     assert per_row[64] <= 1.25 * per_row[8], per_row
     assert per_row[512] <= 1.25 * per_row[8], per_row
@@ -303,8 +302,6 @@ def test_admission_fast_path_taken_and_bit_exact():
     """Steady-state chunks with NO new keys must take the all-hit fast
     branch (no sequential admission work), counted via the trace-side
     instrumentation callback — and stay bit-exact vs the reference."""
-    from repro.core.keyed import ADMISSION_COUNTS, reset_admission_counts
-
     m = monoids.sum_monoid(jnp.int32)
     W, chunk, U = 5, 16, 8
     # chunk 0 contains the whole key universe (admits everything in one
@@ -315,12 +312,18 @@ def test_admission_fast_path_taken_and_bit_exact():
     wvals, vals = _scalar_vals(chunk), _scalar_vals(6 * chunk)
     eng = KeyedChunkedStream(m, W, slots=U + 2, chunk=chunk,
                              instrument_admission=True)
-    reset_admission_counts()
+    obs_counters.admission.reset()
     st, y0 = eng.stream(warm, wvals)
     st, ys = eng.stream(keys, vals, state=st)
-    jax.effects_barrier()  # flush the debug callbacks before reading
-    assert ADMISSION_COUNTS["slow"] == 1, ADMISSION_COUNTS  # admitting chunk
-    assert ADMISSION_COUNTS["fast"] == 6, ADMISSION_COUNTS  # steady state
+    # read() flushes the debug callbacks (effects_barrier) before snapshotting
+    counts = obs_counters.admission.read()
+    assert counts["slow"] == 1, counts  # admitting chunk
+    assert counts["fast"] == 6, counts  # steady state
+    # the legacy module-level alias must stay the same live group
+    from repro.core.keyed import ADMISSION_COUNTS
+
+    assert ADMISSION_COUNTS is obs_counters.admission
+    assert ADMISSION_COUNTS["fast"] == 6  # dict-compat read on the alias
     # the fast path must not change results: bit-exact vs the reference
     ref = per_key_reference(
         m, np.concatenate([warm, keys]),

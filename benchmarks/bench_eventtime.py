@@ -22,6 +22,12 @@ CI ``--compare`` gate tracks (the per-element Fig-12 rows time host Python
 loops and are informational only)::
 
     eventtime,max,bulk,horizon=1024,chunk=1024,T=30000,B=8,items_per_s=...
+    eventtime,sum,disorder,d=16,horizon=256,chunk=1024,T=30000,B=8,...
+
+The ``disorder`` rows are the adaptivity sweep of the disorder-adaptive
+release path (:mod:`repro.core.ooo_index`): d = 0 must ride the no-sort
+fast branch, d ∈ {16, 256} the bounded merge; ``roofline_frac`` uses the
+distance-aware release model.
 """
 
 from __future__ import annotations
@@ -74,11 +80,13 @@ def run_eventtime(algo_name, tau, n_items=20_000):
 
 
 def bulk_throughput(monoid, horizon, T, B, chunk=1024, disorder=0.1,
-                    repeats=3, seed=7):
+                    slack=None, repeats=3, seed=7):
     """Best-of-``repeats`` items/s for the bulk event-time engine on a
     disordered stream (best-of beats machine noise; the engine is jitted
-    and state-free across repeats)."""
-    slack = max(float(horizon) / 16, 1.0)
+    and state-free across repeats).  ``slack`` bounds lateness (and so the
+    out-of-order distance); defaults to horizon / 16."""
+    if slack is None:
+        slack = max(float(horizon) / 16, 1.0)
     s = DisorderedEventStream(T, B, mean_gap=1.0, disorder=disorder,
                               slack=slack, seed=seed)
     ts, xs = s.arrival()
@@ -98,15 +106,21 @@ def bulk_throughput(monoid, horizon, T, B, chunk=1024, disorder=0.1,
     return best
 
 
-def _roofline_frac(thr, chunk, horizon, B):
+def _roofline_frac(thr, chunk, horizon, B, distance=0):
     bound = eventtime_release_cost(
-        chunk, 2 * int(horizon) + 64, batch=B
+        chunk, 2 * int(horizon) + 64, distance=distance, batch=B
     )["items_per_s_bound"]
     return thr / bound if bound > 0 else 0.0
 
 
 def main(tau=10.0, n_items=6000, horizons=(256, 1024, 2048), bulk_T=30000,
-         bulk_B=8, bulk_chunk=1024):
+         bulk_B=8, bulk_chunk=1024, disorder_ds=(0, 16, 256)):
+    """``disorder_ds``: the adaptivity sweep — out-of-order distance d per
+    row (d = 0 is the no-sort ``lax.cond`` fast branch; d > 0 streams are
+    50% late rows with lateness, hence displacement, bounded by slack = d).
+    The d = 0 row shares its configuration (horizon=256, slack=16, seed,
+    capacity/buffer formulas) with the committed ``chunked,sum,
+    eventtime_d0.0`` row, so the two are directly comparable across PRs."""
     rows = []
     for algo in ["two_stacks_lite", "daba", "daba_lite"]:
         thr, counts = run_eventtime(algo, tau, n_items)
@@ -120,13 +134,30 @@ def main(tau=10.0, n_items=6000, horizons=(256, 1024, 2048), bulk_T=30000,
     for name, monoid in (("sum", monoids.sum_monoid()),
                          ("max", monoids.max_monoid())):
         for h in horizons:
+            # disorder 0.1 bounded by slack = h/16 → distance ≈ h//16
             thr = bulk_throughput(monoid, h, bulk_T, bulk_B, chunk=bulk_chunk)
+            frac = _roofline_frac(thr, bulk_chunk, h, bulk_B,
+                                  distance=int(h) // 16)
             rows.append(
                 f"eventtime,{name},bulk,horizon={h},chunk={bulk_chunk},"
                 f"T={bulk_T},B={bulk_B},items_per_s={thr:.0f},"
-                f"roofline_frac={_roofline_frac(thr, bulk_chunk, h, bulk_B):.3f}"
+                f"roofline_frac={frac:.3f}"
             )
             print(rows[-1], flush=True)
+    # the adaptivity sweep: fixed horizon, out-of-order distance d per row
+    for d in disorder_ds:
+        monoid = monoids.sum_monoid()
+        h = 256
+        slack = float(max(d, 16))
+        thr = bulk_throughput(monoid, h, bulk_T, bulk_B, chunk=bulk_chunk,
+                              disorder=0.0 if d == 0 else 0.5, slack=slack)
+        frac = _roofline_frac(thr, bulk_chunk, h, bulk_B, distance=d)
+        rows.append(
+            f"eventtime,sum,disorder,d={d},horizon={h},chunk={bulk_chunk},"
+            f"T={bulk_T},B={bulk_B},items_per_s={thr:.0f},"
+            f"roofline_frac={frac:.3f}"
+        )
+        print(rows[-1], flush=True)
     return rows
 
 

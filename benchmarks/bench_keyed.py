@@ -41,7 +41,7 @@ import numpy as np
 from repro.core import daba_lite, monoids
 from repro.core.keyed import KeyedChunkedStream
 from repro.data.stream import KeyedEventStream
-from repro.roofline.analysis import keyed_update_cost
+from repro.roofline.analysis import keyed_horizon_cost, keyed_update_cost
 
 
 def _events(T, K, seed=0):
@@ -75,6 +75,24 @@ def bulk_cold_throughput(monoid, window, K, T, chunk, repeats=2):
     t0 = time.perf_counter()
     for _ in range(repeats):
         _, ys = eng.stream(keys, xs)  # state=None → fresh init each time
+        jax.block_until_ready(ys)
+    return repeats * T / (time.perf_counter() - t0)
+
+
+def bulk_horizon_throughput(monoid, window, horizon, K, T, chunk, repeats=3):
+    """Warm steady-state items/s in event-time ``horizon=`` mode: same
+    protocol as :func:`bulk_throughput` plus per-row timestamps (replayed
+    ts stay per-key non-decreasing across repeats — equal is allowed)."""
+    s = KeyedEventStream(T, K, zipf_a=1.2, integer_values=True, seed=0)
+    keys, ts, xs = s.arrival()
+    eng = KeyedChunkedStream(monoid, window, slots=K, chunk=chunk,
+                             horizon=horizon)
+    st, ys = eng.stream(keys, xs, ts=ts)  # compile + admit the key set
+    st, ys = eng.stream(keys, xs, ts=ts, state=st)
+    jax.block_until_ready(ys)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        st, ys = eng.stream(keys, xs, ts=ts, state=st)
         jax.block_until_ready(ys)
     return repeats * T / (time.perf_counter() - t0)
 
@@ -156,6 +174,18 @@ def main(Ks=(256, 4096, 65536), window=256, chunks=(1024, 4096), T=65536,
                 f"chunk={big_chunk},T={big_T},items_per_s={thr:.0f},"
                 f"roofline_frac={_roofline_frac(thr, big_chunk, W):.3f}"
             )
+    # event-time horizon= row (informational, never gated — the first keyed
+    # event-time baseline; max exercises the flip sweep with finger-search
+    # span starts)
+    hz = 1024.0
+    thr = bulk_horizon_throughput(monoids.max_monoid(jnp.int32), window, hz,
+                                  big_K, min(T, big_T), big_chunk)
+    bound = keyed_horizon_cost(big_chunk, window)["items_per_s_bound"]
+    emit(
+        f"keyed,max,bulk_horizon,K={big_K},window={window},horizon={hz:.0f},"
+        f"chunk={big_chunk},T={min(T, big_T)},items_per_s={thr:.0f},"
+        f"roofline_frac={thr / bound if bound > 0 else 0.0:.3f}"
+    )
     return rows
 
 

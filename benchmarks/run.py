@@ -64,9 +64,10 @@ def emit_json(name: str, rows, out_dir: str = ".") -> pathlib.Path:
 # rows with these labels are informational, not regression-gated: the
 # per-key Python loop and the Fig-12 relvar rows time host Python-loop
 # dispatch overhead (noisy across machines), speedup/tune rows carry no
-# items_per_s of their own
+# items_per_s of their own, and bulk_horizon is the first keyed event-time
+# baseline (no committed history to gate against yet)
 _COMPARE_SKIP_LABELS = {"per_key_loop", "relvar", "speedup", "tune",
-                        "tune_best"}
+                        "tune_best", "bulk_horizon"}
 
 
 def _row_key(rec: dict):

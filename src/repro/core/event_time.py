@@ -59,6 +59,17 @@ stream would use — the FiBA papers' in-order merge discipline — so
 non-commutative monoids (argmax tie-breaks, m4 first/last, affine
 composition) stay exact: no combine ever sees its operands swapped.
 
+The merge/insert machinery that implements this rule now lives in
+:mod:`repro.core.ooo_index` (the vectorized finger-style tail index), and
+the engine is **disorder-adaptive**: a per-chunk ``lax.cond`` takes a fast
+branch — no sort, no searchsorted merge, released rows append after the
+window — whenever the chunk appends at the frontier (out-of-order distance
+0), and otherwise stable-sorts only the trailing (buffer ++ chunk) region
+and rank-merges it in, the 1810.11308 / 2307.11210 cost shape: work scales
+with the out-of-order distance, never the window.  Both branches emit
+byte-identical layouts, so outputs are bit-exact across branches (see
+README "Out-of-order hot path").
+
 The flip invariant (constant-combine bulk outputs)
 --------------------------------------------------
 
@@ -108,7 +119,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import swag_base
+from repro.core import ooo_index, swag_base
 from repro.core.monoids import Monoid
 from repro.core.swag_base import chunk_length, tree_index
 from repro.obs import counters as obs_counters
@@ -280,6 +291,15 @@ def reset_combine_counts() -> None:
 
 def _count_combines(key: str, n: int) -> None:
     obs_counters.combines.bump(key, n)
+
+
+def _count_release(key: str) -> None:
+    obs_counters.releases.bump(key, 1)
+
+
+# ring length of the per-chunk out-of-order distance gauge in the engine
+# state: obs scrapes report max/p95 over the last OOO_RING chunks
+OOO_RING = 32
 
 
 def counting_combines(monoid: Monoid, key: str) -> Monoid:
@@ -527,15 +547,25 @@ class EventTimeChunkedStream:
         ...
         res = eng.stream(ts, xs)      # whole stream + flush, compacted
 
-    Per chunk: watermark advance, stable time-sort of (reorder buffer ++
-    chunk), release of everything at or below the watermark, one rank-based
-    stable merge into the live window, per-released-element window outputs
-    via the constant-combine :func:`flip_range_fold` sweep (or the
+    Per chunk: watermark advance, then the **disorder-adaptive release
+    path** (:mod:`repro.core.ooo_index`) — a ``lax.cond`` tests whether the
+    masked chunk appends at the frontier (non-decreasing, everything at or
+    above the previous ``max_ts``); if so (out-of-order distance 0, the
+    steady state of an in-order stream) the sorted pending run is ONE
+    compacting gather and released rows concatenate after the window with
+    no sort and no searchsorted merge, else the trailing (buffer ++ chunk)
+    region — never the window — is stable time-sorted and released rows
+    rank-merge into the live window.  Then per-released-element window
+    outputs via the constant-combine :func:`flip_range_fold` sweep (or the
     invertible-commutative prefix-scan fast path), and a watermark-driven
     bulk eviction of expired window entries (a contiguous slice of the
     merged array — no re-sort).
     All shapes are static — full and (mask-padded) ragged chunks share one
     compilation, mirroring :class:`repro.core.chunked.ChunkedStream`.
+    ``instrument_release=True`` counts the branch taken per chunk in
+    ``repro.obs.counters.releases`` (barrier before reading: use
+    ``.read()``); the per-chunk measured out-of-order distance rides in the
+    state (``ooo_recent``) and surfaces as the ``ooo_distance`` obs gauges.
 
     Capacities (static): ``capacity`` bounds the number of live in-horizon
     elements (overflow loses the OLDEST window entries), ``buffer`` bounds
@@ -558,6 +588,7 @@ class EventTimeChunkedStream:
         ts_dtype=jnp.float32,
         use_inverse: Optional[bool] = None,
         instrument_combines: bool = False,
+        instrument_release: bool = False,
     ):
         if late_policy not in ("drop", "side_output", "merge"):
             raise ValueError(f"unknown late_policy {late_policy!r}")
@@ -576,7 +607,9 @@ class EventTimeChunkedStream:
             use_inverse = monoid.invertible and monoid.commutative
         self._use_inverse = use_inverse
         self.instrument_combines = bool(instrument_combines)
-        self._jitted = {}  # (C, with_outputs) -> jitted impl
+        self.instrument_release = bool(instrument_release)
+        self._jitted = {}  # (C, with_outputs, path) -> jitted impl
+        self._scan_jitted = {}  # (T, n_full, path) -> jitted whole-stream scan
         self._full_masks: dict = {}
 
     # -- state -------------------------------------------------------------
@@ -604,6 +637,7 @@ class EventTimeChunkedStream:
             "n_late": zero,
             "n_dropped": zero,
             "n_overflow": zero,
+            "ooo_recent": jnp.zeros((OOO_RING,), jnp.int32),
         }
 
     def window_fold(self, state: PyTree) -> PyTree:
@@ -633,6 +667,10 @@ class EventTimeChunkedStream:
             "late_total": state["n_late"],
             "dropped_total": state["n_dropped"],
             "overflow_total": state["n_overflow"],
+            "ooo_distance_max": jnp.max(state["ooo_recent"]),
+            "ooo_distance_p95": jnp.percentile(
+                state["ooo_recent"].astype(jnp.float32), 95.0
+            ),
         }
 
     def attach_obs(self, registry, get_state, *, prefix: str = "repro_eventtime"):
@@ -655,6 +693,14 @@ class EventTimeChunkedStream:
                               "late elements discarded by the drop policy"),
             "overflow_total": (f"{prefix}_overflow_total", "counter",
                                "elements lost to reorder-buffer/window overflow"),
+            "ooo_distance_max": (
+                f"{prefix}_ooo_distance_max", "gauge",
+                f"max measured out-of-order distance over the last "
+                f"{OOO_RING} chunks"),
+            "ooo_distance_p95": (
+                f"{prefix}_ooo_distance_p95", "gauge",
+                f"p95 measured out-of-order distance over the last "
+                f"{OOO_RING} chunks"),
         }
         for key, (series, typ, help) in names.items():
             registry.describe(series, typ, help)
@@ -669,7 +715,7 @@ class EventTimeChunkedStream:
     # -- one chunk ---------------------------------------------------------
 
     def process_chunk(self, state, ts, xs, mask=None, *, final=False,
-                      with_outputs: bool = True):
+                      with_outputs: bool = True, path: Optional[str] = None):
         """Consume a chunk: ``ts`` (C,), ``xs`` (C, B, ...) raw inputs.
 
         ``mask`` (C,) pads a ragged final chunk (False rows are ignored
@@ -679,29 +725,39 @@ class EventTimeChunkedStream:
         telemetry read path).  Returns ``(state, out)`` with ``out`` a dict:
         ``ts``/``ys`` (P = buffer+C rows, ``mask`` selects the released
         prefix, event order) and ``late`` (C,) late-arrival flags.
+
+        ``path`` pins the release branch STATICALLY (its own jit cache
+        entry): ``None`` (default) traces the runtime ``lax.cond``;
+        ``"slow"`` always sorts (correct for any chunk); ``"fast"``
+        compiles the branch-free in-order program — the caller GUARANTEES
+        the chunk appends at the frontier (:meth:`stream` proves this on
+        the host from the full timestamp array; an unproven "fast" on a
+        disordered chunk silently corrupts the window).  XLA:CPU charges a
+        conditional in this program shape ~400 us/chunk in lost fusion, so
+        the static variants are the hot path.
         """
         C = int(jnp.shape(jnp.asarray(ts))[0])
         if mask is None:
             mask = self._full_mask(C)
-        key = (C, bool(with_outputs))
+        key = (C, bool(with_outputs), path)
         fn = self._jitted.get(key)
         if fn is None:
             fn = self._jitted[key] = jax.jit(
                 lambda st, t, x, mk, fin: self._process_impl(
-                    st, t, x, mk, fin, with_outputs
+                    st, t, x, mk, fin, with_outputs, path
                 )
             )
         return fn(state, ts, xs, mask, jnp.asarray(final, bool))
 
     def chunk_fn(self, state, ts, xs, mask=None, *, final=False,
-                 with_outputs: bool = True):
+                 with_outputs: bool = True, path: Optional[str] = None):
         """Unjitted :meth:`process_chunk` body — pure, for composing into a
         caller's own ``jit`` (the telemetry layer's fused observe)."""
         C = int(jnp.shape(jnp.asarray(ts))[0])
         if mask is None:
             mask = self._full_mask(C)
         return self._process_impl(
-            state, ts, xs, mask, jnp.asarray(final, bool), with_outputs
+            state, ts, xs, mask, jnp.asarray(final, bool), with_outputs, path
         )
 
     def flush(self, state, example_xs):
@@ -713,7 +769,10 @@ class EventTimeChunkedStream:
         ts = jnp.zeros((1,), self.ts_dtype)
         mask = jnp.zeros((1,), bool)
         row = jax.tree.map(lambda a: a[:1], example_xs)
-        return self.process_chunk(state, ts, row, mask, final=True)
+        # a fully-masked chunk is trivially at the frontier (every ts_in row
+        # is the TS_MAX sentinel), so the drain always takes the fast path
+        return self.process_chunk(state, ts, row, mask, final=True,
+                                  path="fast")
 
     def _full_mask(self, C: int):
         m = self._full_masks.get(C)
@@ -721,9 +780,42 @@ class EventTimeChunkedStream:
             m = self._full_masks[C] = jnp.ones((C,), bool)
         return m
 
+    def _stream_scan(self, T: int, n_full: int, path: str):
+        """Jitted ``lax.scan`` over a stream's full-chunk prefix: ONE
+        dispatch for ``n_full`` chunks, every chunk on the statically
+        resolved release branch (see :meth:`stream` — the per-chunk python
+        dispatch otherwise dominates the fast path).  Outputs come back
+        stacked with an (n_full,) leading axis."""
+        key = (T, n_full, path)
+        fn = self._scan_jitted.get(key)
+        if fn is None:
+            C = self.chunk
+            mask = self._full_mask(C)
+
+            def scan_fn(state, ts, xs):
+                tsc = ts[: n_full * C].reshape(n_full, C)
+                xsc = jax.tree.map(
+                    lambda a: a[: n_full * C].reshape(
+                        (n_full, C) + a.shape[1:]
+                    ),
+                    xs,
+                )
+
+                def body(st, inp):
+                    t, x = inp
+                    return self._process_impl(
+                        st, t, x, mask, jnp.asarray(False), True, path
+                    )
+
+                return jax.lax.scan(body, state, (tsc, xsc))
+
+            fn = self._scan_jitted[key] = jax.jit(scan_fn)
+        return fn
+
     # -- impl ---------------------------------------------------------------
 
-    def _process_impl(self, state, ts, xs, mask, final, with_outputs):
+    def _process_impl(self, state, ts, xs, mask, final, with_outputs,
+                      path: Optional[str] = None):
         m = self.monoid
         ident = m.identity()
         W, K = self.capacity, self.buffer
@@ -736,7 +828,8 @@ class EventTimeChunkedStream:
 
         # -- watermark advance (monotone; final drains everything) ---------
         chunk_max = jnp.max(jnp.where(valid, ts, tmin))
-        max_ts = jnp.maximum(state["max_ts"], chunk_max)
+        prev_max = state["max_ts"]  # the append frontier the chunk must clear
+        max_ts = jnp.maximum(prev_max, chunk_max)
         wm_prev = state["wm"]
         base_wm = jnp.where(max_ts > tmin, max_ts - self.slack, tmin)
         wm = jnp.maximum(jnp.where(final, tmax, base_wm), wm_prev)
@@ -754,62 +847,69 @@ class EventTimeChunkedStream:
         ts_in = jnp.where(keep_in, ts, tmax)
         chunk_agg = _mask_tree(lifted, keep_in, ident)
 
-        # -- reorder: stable time-sort of (buffer ++ chunk) -----------------
-        # buffer entries arrived earlier, so they precede same-ts chunk rows;
-        # chunk rows keep arrival order on ties (the merge-order invariant).
-        pend_ts = jnp.concatenate([state["buf_ts"], ts_in])
-        pend_agg = jax.tree.map(
-            lambda a, b: jnp.concatenate([a, b], axis=0),
-            state["buf_agg"],
-            chunk_agg,
-        )
-        order = jnp.argsort(pend_ts, stable=True)
-        pend_ts = pend_ts[order]
-        pend_agg = _take0(pend_agg, order)
+        # -- disorder-adaptive release path (core/ooo_index.py) -------------
+        # A lax.cond picks, per chunk, how the sorted pending permutation is
+        # produced: the d = 0 fast branch — the chunk appends at the
+        # frontier (prev_max), so the permutation is pure index arithmetic
+        # (compact_perm): no sort, no timestamp comparisons — vs the
+        # general branch's stable argsort of the trailing (buffer ++ chunk)
+        # region (never the window), which also measures the chunk's true
+        # out-of-order distance from the permutation.  ONLY the (P,)
+        # permutation + mask + distance cross the cond: XLA:CPU
+        # conditionals copy their operands/results and block fusion, so
+        # keeping the branch bodies tiny is worth ~450 us/chunk over
+        # putting the merge inside.  The gathers, release split, gather-only
+        # rank merge, output sweep and eviction below are branch-free, so
+        # outputs are bit-exact whichever branch produced the permutation.
+        win_ts, win_agg = state["win_ts"], state["win_agg"]
+        buf_ts, buf_agg = state["buf_ts"], state["buf_agg"]
         P = K + C
-        jj = jnp.arange(P, dtype=jnp.int32)
-        n_rel = ((pend_ts <= wm) & (pend_ts < tmax)).sum(dtype=jnp.int32)
-        rel = jj < n_rel
-        rel_ts = jnp.where(rel, pend_ts, tmax)
-        rel_agg = _mask_tree(pend_agg, rel, ident)
-
-        # -- new reorder buffer: the unreleased remainder -------------------
-        src = jnp.clip(jj + n_rel, 0, P - 1)
-        in_range = (jj + n_rel) < P
-        nb_ts = jnp.where(in_range, pend_ts[src], tmax)
-        nb_agg = _mask_tree(_take0(pend_agg, src), in_range, ident)
-        n_overflow = state["n_overflow"] + (nb_ts[K:] < tmax).sum(dtype=jnp.int32)
-        buf_ts_new = nb_ts[:K]
-        buf_agg_new = jax.tree.map(lambda a: a[:K], nb_agg)
-
-        # -- stable merge of released elements into the window --------------
-        # Both runs are already time-sorted (window ascending with tmin pads
-        # in front; released prefix ascending with tmax pads behind), so the
-        # merged position of every row is its own index plus its RANK in the
-        # other run — searchsorteds and gathers replace the old stable
-        # argsort over W+P rows plus its inverse permutation (and the
-        # scatter dual: scatters lower to sequential loops on CPU).  Tie
-        # discipline (merge-order invariant): window entries precede
-        # same-timestamp released entries (win side="left", rel side="right").
-        win_ts = state["win_ts"]
         Mtot = W + P
-        pos_win = jnp.arange(W, dtype=jnp.int32) + jnp.searchsorted(
-            rel_ts, win_ts, side="left"
-        ).astype(jnp.int32)
-        pos_rel = jj + jnp.searchsorted(
-            win_ts, rel_ts, side="right"
-        ).astype(jnp.int32)
-        # gather dual: pos_win is strictly increasing, so the last window
-        # position <= i tells merged row i which run it came from and its
-        # rank there (#rel rows <= i is then i - wsel - 1).
-        mi = jnp.arange(Mtot, dtype=jnp.int32)
-        wsel = jnp.searchsorted(pos_win, mi, side="right").astype(jnp.int32) - 1
-        wsel_c = jnp.clip(wsel, 0, W - 1)
-        from_win = (wsel >= 0) & (pos_win[wsel_c] == mi)
-        rsel = jnp.clip(mi - wsel - 1, 0, P - 1)
-        mts = jnp.where(from_win, win_ts[wsel_c], rel_ts[rsel])
-        magg = _where_rows(
-            from_win, _take0(state["win_agg"], wsel_c), _take0(rel_agg, rsel)
+        pend_ts0 = jnp.concatenate([buf_ts, ts_in])
+
+        def _fast(_):
+            if self.instrument_release:
+                jax.debug.callback(lambda: _count_release("fast"))
+            src, in_range = ooo_index.compact_perm(buf_ts, C, tmax=tmax)
+            return src, in_range, jnp.zeros((), jnp.int32)
+
+        def _slow(_):
+            if self.instrument_release:
+                jax.debug.callback(lambda: _count_release("slow"))
+            order = jnp.argsort(pend_ts0, stable=True).astype(jnp.int32)
+            d = ooo_index.displacement(pend_ts0, order, tmax)
+            return order, jnp.ones((P,), bool), d
+
+        if path == "fast":  # statically proven in-order (see process_chunk)
+            src, in_range, d_chunk = _fast(0)
+        elif path == "slow":
+            src, in_range, d_chunk = _slow(0)
+        else:
+            fast_ok = ooo_index.chunk_in_order(ts_in, prev_max)
+            src, in_range, d_chunk = jax.lax.cond(fast_ok, _fast, _slow, 0)
+        ooo_recent = jnp.concatenate([state["ooo_recent"][1:], d_chunk[None]])
+
+        # apply the permutation (identical math for both branches: the slow
+        # permutation has in_range all-True, so the masking is a no-op), then
+        # peel the released prefix / shift the remainder into the new buffer
+        pend_agg0 = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), buf_agg, chunk_agg
+        )
+        pend_ts = jnp.where(in_range, pend_ts0[src], tmax)
+        pend_agg = _mask_tree(_take0(pend_agg0, src), in_range, ident)
+        rel_ts, rel_agg, rel, buf_ts_new, buf_agg_new, ovf_inc = (
+            ooo_index.release_split(
+                pend_ts, pend_agg, wm, buffer=K, tmax=tmax, ident=ident
+            )
+        )
+        n_overflow = state["n_overflow"] + ovf_inc
+
+        # stable gather-only merge of released elements into the window
+        # (rank-dual searchsorteds — no sort, no combines; in the fast case
+        # every released row lands after the window live region, and the
+        # ranks come out equal to a plain append)
+        mts, magg, pos_rel = ooo_index.rank_merge(
+            win_ts, win_agg, rel_ts, rel_agg
         )
 
         # -- per-released-element outputs: fold over (ts - horizon, ts] -----
@@ -861,6 +961,7 @@ class EventTimeChunkedStream:
             "n_late": n_late,
             "n_dropped": n_dropped,
             "n_overflow": n_overflow,
+            "ooo_recent": ooo_recent,
         }
         out = {"ts": rel_ts, "ys": ys, "mask": rel, "late": late}
         return state, out
@@ -900,14 +1001,54 @@ class EventTimeChunkedStream:
                 n_dropped=int(state["n_dropped"]),
                 state=state,
             )
-        outs = []
-        late_masks = []
-        for lo in range(0, T, self.chunk):
-            hi = min(lo + self.chunk, T)
+        # Resolve the release branch per chunk on the HOST: the whole ts
+        # array is in hand, so the device's frontier/watermark recurrence
+        # can be replayed exactly (same-dtype arithmetic, identical
+        # comparisons) and every chunk runs the branch-free specialized
+        # program — process_chunk(path=...) — instead of the runtime
+        # lax.cond (which XLA:CPU charges ~400 us/chunk in lost fusion).
+        # "fast" is only claimed when the chunk provably appends at the
+        # frontier with nothing late, the exact device predicate.
+        ts_host = np.asarray(jax.device_get(ts))
+        prev_max, prev_wm = (
+            np.asarray(v) for v in jax.device_get(
+                (state["max_ts"], state["wm"])
+            )
+        )
+        tmin_h = np.asarray(jax.device_get(self._tmin))
+        slack_h = np.asarray(jax.device_get(self.slack))
+        C = self.chunk
+        paths = []
+        for lo in range(0, T, C):
+            r = ts_host[lo:min(lo + C, T)]
+            in_order = bool(np.all(r[1:] >= r[:-1]))
+            fast = in_order and bool(r[0] >= prev_max) and bool(r[0] >= prev_wm)
+            paths.append("fast" if fast else "slow")
+            prev_max = np.maximum(prev_max, r.max())
+            base_wm = prev_max - slack_h if prev_max > tmin_h else tmin_h
+            prev_wm = np.maximum(base_wm, prev_wm)
+
+        outs = []  # per-chunk (out dict, #real chunk rows) after the scan
+        stacked = None  # (n_full, ...) leading-axis outs of the scanned prefix
+        n_full = T // C
+        # When every full chunk agrees on the branch — in-order streams are
+        # all-fast, heavily disordered ones all-slow — the whole chunk loop
+        # runs as ONE jitted lax.scan: a single dispatch for T/C chunks
+        # (the per-chunk python dispatch otherwise dominates the fast path).
+        use_scan = n_full >= 2 and len(set(paths[:n_full])) == 1
+        if use_scan:
+            state, stacked = self._stream_scan(
+                T, n_full, paths[0]
+            )(state, ts, xs)
+            start = n_full * C
+        else:
+            start = 0
+        for lo in range(start, T, C):
+            hi = min(lo + C, T)
             pts = ts[lo:hi]
             pxs = jax.tree.map(lambda a: a[lo:hi], xs)
-            if hi - lo < self.chunk:  # ragged final chunk: pad + mask
-                pad = self.chunk - (hi - lo)
+            if hi - lo < C:  # ragged final chunk: pad + mask
+                pad = C - (hi - lo)
                 pts = jnp.concatenate(
                     [pts, jnp.broadcast_to(pts[-1:], (pad,))], axis=0
                 )
@@ -917,28 +1058,24 @@ class EventTimeChunkedStream:
                     ),
                     pxs,
                 )
-                mask = jnp.arange(self.chunk) < (hi - lo)
+                mask = jnp.arange(C) < (hi - lo)
             else:
                 mask = None
-            state, out = self.process_chunk(state, pts, pxs, mask)
-            outs.append(out)
-            late_masks.append(out["late"][: hi - lo])
+            state, out = self.process_chunk(
+                state, pts, pxs, mask, path=paths[lo // C]
+            )
+            outs.append((out, hi - lo))
         if flush and T > 0:
             state, out = self.flush(state, jax.tree.map(lambda a: a[:1], xs))
-            outs.append(out)
-            late_masks.append(out["late"][:0])
+            outs.append((out, 0))
 
-        # one host transfer for everything
+        # one host transfer for everything; the per-chunk outputs are
+        # concatenated HOST-side with numpy (a device jnp.concatenate over
+        # ~T/C small operands costs more in dispatch than the chunk loop)
         host = jax.device_get(
             {
-                "ts": jnp.concatenate([o["ts"] for o in outs]),
-                "mask": jnp.concatenate([o["mask"] for o in outs]),
-                "late": jnp.concatenate(late_masks) if late_masks
-                else jnp.zeros((0,), bool),
-                "ys": jax.tree.map(
-                    lambda *parts: jnp.concatenate(parts, axis=0),
-                    *[o["ys"] for o in outs],
-                ) if outs and outs[0]["ys"] is not None else None,
+                "stacked": stacked,
+                "outs": [o for o, _ in outs],
                 "counters": {
                     k: state[k] for k in ("n_late", "n_dropped", "n_overflow")
                 },
@@ -951,12 +1088,40 @@ class EventTimeChunkedStream:
                 f"raise capacity= (live in-horizon elements) or buffer= "
                 f"(reorder slots) for this stream"
             )
-        sel = host["mask"]
+
+        def flat2(a):  # (n_full, L, ...) scan stack -> (n_full*L, ...)
+            return a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+
+        parts_ts, parts_mask, parts_late, parts_ys = [], [], [], []
+        if host["stacked"] is not None:
+            s = host["stacked"]
+            parts_ts.append(flat2(s["ts"]))
+            parts_mask.append(flat2(s["mask"]))
+            parts_late.append(flat2(s["late"]))
+            parts_ys.append(jax.tree.map(flat2, s["ys"]))
+        for o, n in zip(host["outs"], (n for _, n in outs)):
+            parts_ts.append(o["ts"])
+            parts_mask.append(o["mask"])
+            parts_late.append(o["late"][:n])
+            if o["ys"] is not None:
+                parts_ys.append(o["ys"])
+        ts_all = np.concatenate(parts_ts)
+        sel = np.concatenate(parts_mask)
+        late_all = (
+            np.concatenate(parts_late) if parts_late
+            else np.zeros((0,), bool)
+        )
+        ys_all = (
+            jax.tree.map(
+                lambda *ps: np.concatenate(ps, axis=0), *parts_ys
+            )
+            if parts_ys else None
+        )
         return EventTimeResult(
-            ts=host["ts"][sel],
-            ys=jax.tree.map(lambda a: a[sel], host["ys"])
-            if host["ys"] is not None else None,
-            late_rows=np.nonzero(host["late"])[0],
+            ts=ts_all[sel],
+            ys=jax.tree.map(lambda a: a[sel], ys_all)
+            if ys_all is not None else None,
+            late_rows=np.nonzero(late_all)[0],
             n_late=int(host["counters"]["n_late"]),
             n_dropped=int(host["counters"]["n_dropped"]),
             state=state,

@@ -76,10 +76,11 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import swag_base
+from repro.core import ooo_index, swag_base
 from repro.core.event_time import (
     COMBINE_COUNTS,
     counting_combines,
+    flip_range_fold,
     range_fold_invertible,
     reset_combine_counts,
     seg_prefix_scan,
@@ -457,7 +458,26 @@ class KeyedWindowStore:
         aggregate (what :meth:`query` serves);
       * ``n_seen`` (slots,)               — elements ever folded per slot;
       * ``dir``                           — the :class:`KeyDirectory` state;
-      * ``tick``   ()                     — default recency clock.
+      * ``tick``   ()                     — default recency clock;
+      * ``carry_ts`` (slots, window-1)    — HORIZON MODE ONLY: lane t holds
+        the timestamp of the slot's ``window-1-t``-th-from-last element
+        (``-inf`` where that element does not exist yet).
+
+    ``horizon=`` switches the store from count windows to true EVENT-TIME
+    windows: row j's output folds its key's elements with timestamp
+    ``> ts_j - horizon`` (still capped at the last ``window`` elements —
+    ``window`` becomes the static per-key capacity).  Expiry is watermark-
+    driven and READ-side: the warm-prefix gather selects carry lane
+    ``max(p, t*)`` where ``t* = #{lane_ts <= ts_j - horizon}`` counts the
+    expired history lanes, and the in-chunk span start comes from the
+    per-segment finger search :func:`repro.core.ooo_index
+    .seg_bounded_search` — no per-slot sweep ever runs, the one-gather/
+    one-scatter carry refresh (and its donation) is preserved, with
+    ``carry_ts`` refreshed by the same shifted-lane/from-chunk ladder as
+    ``carry``.  Precondition: each key's timestamps must be non-decreasing
+    in arrival order (chain the store behind :class:`repro.core.event_time
+    .EventTimeChunkedStream`, whose released rows are globally sorted).
+    ``horizon=None`` keeps the count path byte-identical.
 
     :meth:`update_chunk` is pure (jit it, or use :class:`KeyedChunkedStream`
     which caches the jit per chunk length).
@@ -472,6 +492,7 @@ class KeyedWindowStore:
         dir_factor: int = 2,
         probes: int = 32,
         ttl: Optional[float] = None,
+        horizon: Optional[float] = None,
         use_inverse: Optional[bool] = None,
         use_seg_kernel: Optional[bool] = None,
         instrument_admission: bool = False,
@@ -494,6 +515,9 @@ class KeyedWindowStore:
         self.slots = int(slots)
         self.directory = KeyDirectory(slots, dir_factor=dir_factor, probes=probes)
         self.ttl = ttl
+        if horizon is not None and float(horizon) <= 0:
+            raise ValueError(f"horizon must be > 0, got {horizon}")
+        self.horizon = None if horizon is None else float(horizon)
         if use_inverse is None:
             use_inverse = monoid.invertible and monoid.commutative
         self.use_inverse = bool(use_inverse)
@@ -570,7 +594,7 @@ class KeyedWindowStore:
                 ident,
             )
 
-        return {
+        state = {
             "dir": self.directory.init(),
             "carry": fill((self.slots, self.h)),
             "last": fill((self.slots,)),
@@ -578,6 +602,14 @@ class KeyedWindowStore:
             "tick": jnp.zeros((), jnp.float32),
             "n_dropped": jnp.zeros((), jnp.int32),
         }
+        if self.horizon is not None:
+            # -inf = "no such element yet": those lanes always count as
+            # expired in the read-side lane selection, so a cold key's
+            # front-truncated lanes are skipped without any extra mask
+            state["carry_ts"] = jnp.full(
+                (self.slots, self.h), -jnp.inf, jnp.float32
+            )
+        return state
 
     def query(self, state: PyTree, keys) -> tuple:
         """Latest window aggregate per key: ``(aggs, found)`` — identity for
@@ -606,13 +638,18 @@ class KeyedWindowStore:
             return state
         now = state["tick"] if now is None else jnp.asarray(now, jnp.float32)
         dir_state, expired = self.directory.expire(state["dir"], now, self.ttl)
-        return dict(
+        state = dict(
             state,
             dir=dir_state,
             carry=self._reset_lanes(state["carry"], expired),
             last=self._reset_lanes(state["last"], expired),
             n_seen=jnp.where(expired, 0, state["n_seen"]),
         )
+        if self.horizon is not None:
+            state["carry_ts"] = jnp.where(
+                expired[:, None], -jnp.inf, state["carry_ts"]
+            )
+        return state
 
     def _reset_lanes(self, lanes: PyTree, mask) -> PyTree:
         ident = self.monoid.identity()
@@ -638,6 +675,14 @@ class KeyedWindowStore:
         counters.  ``ts`` (scalar or (C,)) feeds directory recency (and the
         TTL clock); defaults to an internal tick.  ``mask`` (C,) pads a
         ragged final chunk (False rows are ignored and emit identities).
+
+        In ``horizon=`` mode row j instead folds its key's elements with
+        timestamp ``> ts_j - horizon`` (capped at the last ``window``),
+        where ``ts`` doubles as the event time.  PRECONDITION: each key's
+        timestamps must be non-decreasing in arrival order (feed released
+        rows of an :class:`repro.core.event_time.EventTimeChunkedStream`);
+        violating it silently returns wrong folds, exactly like violating
+        the flip invariant.
         """
         m = self.monoid
         ident = m.identity()
@@ -721,11 +766,33 @@ class KeyedWindowStore:
         # (its block-suffix ends exactly at the boundary).  O(1) ⊗/row —
         # replaces the old O(log W) per-row doubling range fold.
         lifted = _mask_tree(jax.vmap(m.lift)(xss), row_ok, ident)
-        starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
         m_sweep = self._sweep_monoid()
-        if self.use_inverse:
+        if self.horizon is not None:
+            # Event-time span starts: within a segment the in-horizon rows
+            # form a suffix (per-key ts non-decreasing), found by the
+            # bounded finger search — row j's chunk span is
+            # [max(count start, s0_j), j].  Starts stay non-decreasing
+            # globally (s0 is monotone within a segment, segments are
+            # disjoint and invalid rows sort last with starts = idx + 1)
+            # and ends = idx is strictly increasing, so the generic flip
+            # sweep applies; the W-aligned block trick below does not (its
+            # exactness needs starts == max(a, j - W + 1) precisely).
+            thr = tss - jnp.asarray(self.horizon, tss.dtype)
+            s0 = ooo_index.seg_bounded_search(tss, a, idx, thr)
+            starts = jnp.where(
+                row_ok,
+                jnp.maximum(jnp.maximum(a, idx - (W - 1)), s0),
+                idx + 1,
+            )
+            if self.use_inverse:
+                intra = range_fold_invertible(m_sweep, lifted, starts, idx)
+            else:
+                intra = flip_range_fold(m_sweep, lifted, starts, idx)
+        elif self.use_inverse:
+            starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
             intra = range_fold_invertible(m_sweep, lifted, starts, idx)
         else:
+            starts = jnp.where(row_ok, jnp.maximum(a, idx - (W - 1)), idx + 1)
             # invalid rows are their own single-row segments (their lifted
             # rows are already identity), so garbage never crosses them
             bstart = seg_head | ~vs | (row_ok & (p % W == 0))
@@ -764,9 +831,23 @@ class KeyedWindowStore:
                 crows,
             )
             pidx = jnp.clip(p, 0, h - 1)[:, None]
+            if self.horizon is not None:
+                # the ONE carry_ts read (the ts mirror of ``crows``): t* =
+                # #{lane_ts <= thr} is the first lane whose whole suffix is
+                # in-horizon (-inf "absent" lanes always count as expired),
+                # and the count cap composes with the horizon cap as
+                # lane max(p, t*) — expiry is purely read-side
+                ts_rows = state["carry_ts"][cslot]
+                thr_col = thr[:, None]
+                tstar = jnp.sum(
+                    (ts_rows <= thr_col).astype(jnp.int32), axis=1
+                )
+                lane = jnp.maximum(pidx, jnp.clip(tstar, 0, h - 1)[:, None])
+            else:
+                lane = pidx
             cvals = jax.tree.map(
                 lambda cr: jnp.take_along_axis(
-                    cr, pidx.reshape((C, 1) + (1,) * (cr.ndim - 2)), axis=1
+                    cr, lane.reshape((C, 1) + (1,) * (cr.ndim - 2)), axis=1
                 )[:, 0],
                 crows,
             )
@@ -774,6 +855,11 @@ class KeyedWindowStore:
         # -- warm prefix: windows reaching into the key's history ----------
         if h > 0:
             need_carry = row_ok & (p < h) & ~row_new
+            if self.horizon is not None:
+                # history contributes only when the whole chunk span so far
+                # is itself in-horizon (s0 == a; history is older than any
+                # chunk row) and at least one history lane survives
+                need_carry &= (s0 == a) & (tstar < h)
             warmed = m.combine(cvals, intra)
             ys = _where_rows(need_carry, warmed, intra)
         else:
@@ -842,9 +928,29 @@ class KeyedWindowStore:
                     state["carry"],
                     new_tail,
                 )
+            if self.horizon is not None:
+                # carry_ts rides the SAME ladder as carry: shifted old lane
+                # t + n_seg (-inf for new heads) on lanes the chunk can't
+                # fill, ``tss[src]`` where the trailing suffix fits — one
+                # extra lane view of the already-gathered ts_rows and one
+                # scatter, so the donation discipline holds for carry_ts too
+                ts_old = jnp.take_along_axis(ts_rows, old_t, axis=1)
+                ts_old = jnp.where(row_new[:, None], -jnp.inf, ts_old)
+                ts_tail = jnp.where(in_chunk, tss[src], ts_old[:, h0:])
+                if h0:
+                    cts1 = state["carry_ts"].at[head_scat, :h0].set(
+                        ts_old[:, :h0], mode="drop"
+                    )
+                    cts1 = cts1.at[head_scat, h0:].set(ts_tail, mode="drop")
+                else:
+                    cts1 = state["carry_ts"].at[head_scat].set(
+                        ts_tail, mode="drop"
+                    )
         else:
             head_scat = jnp.where(seg_head & row_ok, slot, S)
             carry1 = state["carry"]
+            if self.horizon is not None:
+                cts1 = state["carry_ts"]
 
         # -- per-slot latest aggregate + seen counts -----------------------
         y_end = _take0(ys, jnp.clip(b, 0, C - 1))
@@ -868,6 +974,8 @@ class KeyedWindowStore:
             tick=jnp.maximum(tick, jnp.max(jnp.where(vs, tss, -jnp.inf))),
             n_dropped=state["n_dropped"] + dropped_sorted.sum(dtype=jnp.int32),
         )
+        if self.horizon is not None:
+            state["carry_ts"] = cts1
         if self.ttl is not None:
             state = self.expire(state)
         info = {
@@ -927,7 +1035,7 @@ class KeyedWindowStore:
             ),
         )
         scat = jnp.where(slots >= 0, slots, self.slots)
-        return dict(
+        state = dict(
             state,
             dir=dir_state,
             carry=jax.tree.map(
@@ -943,6 +1051,14 @@ class KeyedWindowStore:
             n_seen=state["n_seen"].at[scat].set(counts, mode="drop"),
             tick=tick,
         )
+        if self.horizon is not None:
+            # per-element timestamps don't survive the carry protocol:
+            # adopted history is stamped "arrived now", so it expires
+            # all-or-nothing once ``tick`` leaves the horizon
+            state["carry_ts"] = state["carry_ts"].at[scat].set(
+                tick, mode="drop"
+            )
+        return state
 
 
 # ---------------------------------------------------------------------------

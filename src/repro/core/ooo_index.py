@@ -1,0 +1,330 @@
+"""Vectorized finger-style tail index: the disorder-adaptive release path.
+
+The FiBA line of work ("Sub-O(log n) Out-of-Order Sliding-Window
+Aggregation", arXiv 1810.11308; "Out-of-Order SWAG with Efficient Bulk
+Evictions and Insertions", arXiv 2307.11210) keeps a *finger* at the newest
+end of the window so an insert costs O(log d) in the out-of-order distance
+``d`` — not O(log n) in the window — and bulk evictions/insertions amortize
+over whole batches.  This module is the JAX-native transliteration of that
+idea for :class:`repro.core.event_time.EventTimeChunkedStream`'s chunk
+shape, where every array is static-shaped and the adaptivity lives in a
+``lax.cond`` between two code paths instead of a tree descent:
+
+  * **frontier tracking** — the engine's append frontier is ``max_ts`` (the
+    largest event time ever seen; every window and buffer entry is at or
+    below it).  :func:`chunk_in_order` tests, fully vectorized, whether a
+    masked chunk lies entirely at-or-above the frontier in non-decreasing
+    order — the ``d = 0`` case;
+  * **bounded d = 0 merge** — :func:`compact_sorted` turns (sorted reorder
+    buffer ++ in-order chunk) into one sorted pending run with ONE gather
+    (no sort, no searchsorted): the finger insert at distance zero.
+    :func:`append_merge` then places released rows after the window with a
+    static concatenation — merged positions are known without any rank
+    computation;
+  * **bounded general merge** — :func:`sort_pending` (stable argsort of the
+    trailing ``buffer + chunk`` region only — the window proper is never
+    re-sorted) plus :func:`rank_merge`, the searchsorted rank-dual stable
+    merge of two sorted runs.  Work is confined to the trailing
+    ``max(d, slack)``-distance region the reorder buffer bounds: an element
+    later than ``slack`` is handled by the late policy, never by a deeper
+    merge;
+  * **bulk evict/insert** — :func:`release_split` peels the released prefix
+    off the sorted pending run and shifts the remainder into the new
+    reorder buffer in one gather each (the bulk-insert half); the engine's
+    watermark eviction re-gathers a contiguous slice (the bulk-evict half).
+  * **finger search** — :func:`seg_bounded_search`, a vectorized per-row
+    binary search *bounded below by each row's segment head*: the keyed
+    store's event-time (``horizon=``) windows use it to find every row's
+    in-horizon span start inside its key's segment in O(log C) gathers.
+
+:func:`displacement` measures the classic per-chunk out-of-order distance
+``max_i |{j < i : ts_j > ts_i}|`` exactly from the stable sort permutation
+(two argsorts, no scatters) — the ``ooo_distance`` gauge the obs layer
+scrapes.
+
+Everything here is pure and jit-safe; the merge-order invariant (window
+entries precede same-timestamp released entries; buffer entries precede
+same-timestamp chunk entries; chunk entries keep arrival order) is stated
+once in the :mod:`repro.core.event_time` module docstring and implemented
+here.  NOTE the end-of-stream gotcha cross-referenced from there: draining
+via ``EventTimeChunkedStream.stream(..., flush=True)`` (or ``.flush()``)
+releases every pending element AND fully evicts the window — the fast path
+handles the drain chunk (an all-masked chunk is trivially in-order), so a
+flushed engine takes the d = 0 branch even on a previously disordered
+stream.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _bc(mask, leaf):
+    return mask.reshape(mask.shape + (1,) * (leaf.ndim - 1))
+
+
+def _mask_tree(tree: PyTree, mask, ident: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda a, i: jnp.where(_bc(mask, a), a, jnp.asarray(i, a.dtype)),
+        tree,
+        ident,
+    )
+
+
+def _take0(tree: PyTree, idx) -> PyTree:
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+def _where_rows(mask, a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.where(_bc(mask, x), x, y), a, b)
+
+
+def _concat0(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Frontier tracking
+# ---------------------------------------------------------------------------
+
+
+def chunk_in_order(ts_in, frontier):
+    """True iff the masked chunk appends at the frontier: ``ts_in`` (C,)
+    non-decreasing with every entry ``>= frontier``.
+
+    ``ts_in`` is the engine's masked timestamp row — excluded rows (ragged
+    padding, dropped late rows) hold the TS_MAX sentinel, which passes both
+    tests at the chunk tail and fails the monotonicity test in the interior
+    (an interior hole means the kept rows are not a sorted suffix run, so
+    the general path must sort).  ``frontier`` is the pre-chunk ``max_ts``:
+    at or above it, a row can interleave with NOTHING already held (window,
+    buffer, and all prior releases sit at or below), so the whole chunk is
+    one in-order append — the out-of-order distance of every row is zero.
+    """
+    nondecreasing = jnp.all(ts_in[1:] >= ts_in[:-1])
+    at_frontier = jnp.all(ts_in >= frontier)
+    return nondecreasing & at_frontier
+
+
+def displacement(pend_ts, order, tmax):
+    """Exact max out-of-order distance of a pending run (device scalar).
+
+    ``order`` is the stable sort permutation of ``pend_ts`` (P,);
+    ``tmax``-sentinel rows are padding.  For live row i, with r_i its
+    arrival rank among live rows and s_i its sorted rank,
+
+        r_i - s_i = |{j <= i}| - 1 - |{ts_j < ts_i}| - |{j < i, ts_j = ts_i}|
+                  = |{j < i : ts_j > ts_i}|  =  d_i,
+
+    the classic per-element out-of-order distance (stable ties: an equal-ts
+    earlier arrival sorts first and is not counted).  Sorted ranks come from
+    ``argsort(order)`` — the inverse of a permutation, gather-only (a
+    scatter would serialize on CPU) — and live rows all sort before the
+    sentinel padding, so ranks among all rows equal ranks among live rows.
+    """
+    P = pend_ts.shape[0]
+    live = pend_ts < tmax
+    inv = jnp.argsort(order).astype(jnp.int32)
+    r = jnp.cumsum(live.astype(jnp.int32)) - 1
+    d = jnp.where(live, r - inv, 0)
+    return jnp.maximum(jnp.max(d), 0) if P else jnp.int32(0)
+
+
+# ---------------------------------------------------------------------------
+# Pending-run assembly (buffer ++ chunk, time-sorted)
+# ---------------------------------------------------------------------------
+
+
+def compact_perm(buf_ts, chunk_len: int, *, tmax):
+    """The d = 0 sort permutation, computed WITHOUT sorting: indices into
+    (buffer ++ chunk) that compact the buffer's live prefix ahead of the
+    chunk rows, plus the live-region mask.
+
+    Preconditions (the :func:`chunk_in_order` branch guard): the buffer's
+    live prefix is sorted and every live entry is at or below the frontier;
+    every kept chunk row is at or above it, in non-decreasing order with
+    sentinel padding only at the tail.  The stable sorted order is then
+    ``[buffer live, chunk rows, padding]`` — buffer entries precede
+    same-timestamp chunk rows (they arrived earlier: the merge-order
+    invariant's tie rule, for free) — so the permutation is pure index
+    arithmetic over the live count ``nb``.  This is what the engine's fast
+    ``lax.cond`` branch returns in place of ``argsort``: a (P,) int32
+    gather map and a (P,) bool mask, O(P) integer work, zero comparisons
+    of timestamps.  Rows with ``in_range`` False must be forced to the
+    ``tmax`` sentinel / identity by the caller's gather (they alias
+    arbitrary source rows).
+    """
+    K = buf_ts.shape[0]
+    P = K + int(chunk_len)
+    nb = (buf_ts < tmax).sum(dtype=jnp.int32)
+    jj = jnp.arange(P, dtype=jnp.int32)
+    src = jnp.where(jj < nb, jj, jnp.minimum(K + jj - nb, P - 1))
+    in_range = jj < nb + chunk_len
+    return src, in_range
+
+
+def compact_sorted(buf_ts, buf_agg, ts_in, chunk_agg, *, tmax, ident):
+    """The d = 0 merge: one gather (per leaf) over the :func:`compact_perm`
+    permutation turns (sorted buffer ++ in-order chunk) into a sorted
+    pending run — no sort, no searchsorted."""
+    src, in_range = compact_perm(buf_ts, ts_in.shape[0], tmax=tmax)
+    pend_ts0 = jnp.concatenate([buf_ts, ts_in])
+    pend_agg0 = _concat0(buf_agg, chunk_agg)
+    pend_ts = jnp.where(in_range, pend_ts0[src], tmax)
+    pend_agg = _mask_tree(_take0(pend_agg0, src), in_range, ident)
+    return pend_ts, pend_agg
+
+
+def sort_pending(buf_ts, buf_agg, ts_in, chunk_agg):
+    """The general merge: stable time-sort of (buffer ++ chunk).
+
+    Buffer entries arrived earlier, so concatenating them first makes the
+    stable sort keep them ahead of same-timestamp chunk rows, and chunk
+    rows keep arrival order on ties (the merge-order invariant).  This is
+    the trailing-region sort of the bounded merge — P = buffer + chunk
+    rows, never the window — and the ONLY sort on the release path.
+    Returns ``(pend_ts, pend_agg, order)``; ``order`` feeds
+    :func:`displacement`.
+    """
+    pend_ts = jnp.concatenate([buf_ts, ts_in])
+    pend_agg = _concat0(buf_agg, chunk_agg)
+    order = jnp.argsort(pend_ts, stable=True)
+    return pend_ts[order], _take0(pend_agg, order), order
+
+
+# ---------------------------------------------------------------------------
+# Bulk release (the insert half of bulk evict/insert)
+# ---------------------------------------------------------------------------
+
+
+def release_split(pend_ts, pend_agg, wm, *, buffer: int, tmax, ident):
+    """Split a sorted pending run at the watermark: the released prefix and
+    the shifted new reorder buffer, one gather each.
+
+    Returns ``(rel_ts, rel_agg, rel_mask, buf_ts, buf_agg, overflow)``:
+    released rows (ts <= wm) masked to sentinels/identity past the release
+    count, the unreleased remainder left-shifted into the (buffer,)-slot
+    reorder buffer, and the count of live rows that fell off its end
+    (overflow loses the NEWEST pending arrivals — the prefix closest to
+    release is kept).
+    """
+    P = pend_ts.shape[0]
+    K = int(buffer)
+    jj = jnp.arange(P, dtype=jnp.int32)
+    n_rel = ((pend_ts <= wm) & (pend_ts < tmax)).sum(dtype=jnp.int32)
+    rel = jj < n_rel
+    rel_ts = jnp.where(rel, pend_ts, tmax)
+    rel_agg = _mask_tree(pend_agg, rel, ident)
+    src = jnp.clip(jj + n_rel, 0, P - 1)
+    in_range = (jj + n_rel) < P
+    nb_ts = jnp.where(in_range, pend_ts[src], tmax)
+    nb_agg = _mask_tree(_take0(pend_agg, src), in_range, ident)
+    overflow = (nb_ts[K:] < tmax).sum(dtype=jnp.int32)
+    return (
+        rel_ts,
+        rel_agg,
+        rel,
+        nb_ts[:K],
+        jax.tree.map(lambda a: a[:K], nb_agg),
+        overflow,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Window merge (append at the frontier / rank-dual stable interleave)
+# ---------------------------------------------------------------------------
+
+
+def append_merge(win_ts, win_agg, rel_ts, rel_agg):
+    """Merge released rows that all sit at or above the window's newest
+    entry: a static concatenation.
+
+    Valid whenever every released timestamp is >= every window timestamp
+    (the d = 0 branch guarantees it: window entries are at or below the old
+    frontier, released rows at or above).  Tie discipline holds for free —
+    window entries physically precede same-timestamp released entries.
+    Window TS_MIN padding leads, released TS_MAX padding trails, so the
+    result is sorted for the downstream searchsorteds.  Returns
+    ``(mts, magg, pos_rel)`` with ``pos_rel[j] = W + j`` known statically.
+    """
+    W = win_ts.shape[0]
+    P = rel_ts.shape[0]
+    mts = jnp.concatenate([win_ts, rel_ts])
+    magg = _concat0(win_agg, rel_agg)
+    pos_rel = W + jnp.arange(P, dtype=jnp.int32)
+    return mts, magg, pos_rel
+
+
+def rank_merge(win_ts, win_agg, rel_ts, rel_agg):
+    """Stable rank-dual merge of the sorted window and released runs.
+
+    Both runs are time-sorted (window ascending with TS_MIN padding in
+    front, released ascending with TS_MAX padding behind), so every row's
+    merged position is its own index plus its RANK in the other run —
+    searchsorteds and gathers replace a stable argsort over W + P rows and
+    its inverse permutation (and the scatter dual: scatters lower to
+    sequential loops on CPU).  Tie discipline (the merge-order invariant):
+    window entries precede same-timestamp released entries (window
+    ``side="left"``, released ``side="right"``).  Returns
+    ``(mts, magg, pos_rel)``.
+    """
+    W = win_ts.shape[0]
+    P = rel_ts.shape[0]
+    Mtot = W + P
+    jj = jnp.arange(P, dtype=jnp.int32)
+    pos_win = jnp.arange(W, dtype=jnp.int32) + jnp.searchsorted(
+        rel_ts, win_ts, side="left"
+    ).astype(jnp.int32)
+    pos_rel = jj + jnp.searchsorted(
+        win_ts, rel_ts, side="right"
+    ).astype(jnp.int32)
+    # gather dual: pos_win is strictly increasing, so the last window
+    # position <= i tells merged row i which run it came from and its rank
+    # there (#released rows <= i is then i - wsel - 1).
+    mi = jnp.arange(Mtot, dtype=jnp.int32)
+    wsel = jnp.searchsorted(pos_win, mi, side="right").astype(jnp.int32) - 1
+    wsel_c = jnp.clip(wsel, 0, W - 1)
+    from_win = (wsel >= 0) & (pos_win[wsel_c] == mi)
+    rsel = jnp.clip(mi - wsel - 1, 0, P - 1)
+    mts = jnp.where(from_win, win_ts[wsel_c], rel_ts[rsel])
+    magg = _where_rows(
+        from_win, _take0(win_agg, wsel_c), _take0(rel_agg, rsel)
+    )
+    return mts, magg, pos_rel
+
+
+# ---------------------------------------------------------------------------
+# Finger search (per-row, bounded below by a per-row floor)
+# ---------------------------------------------------------------------------
+
+
+def seg_bounded_search(ts, lo, hi, thr):
+    """Per-row finger search: the first index in ``[lo_j, hi_j]`` whose
+    timestamp exceeds ``thr_j`` (``hi_j + 1`` when none does).
+
+    ``ts`` (C,) must be non-decreasing WITHIN each ``[lo_j, hi_j]`` range
+    (the keyed store's per-segment event-time order); across ranges it can
+    be anything — each row's search never reads outside its own range, which
+    is what a global ``searchsorted`` cannot do.  A branchless vectorized
+    binary search: ceil(log2(C)) rounds of one (C,) gather each, no
+    scatters.  This is the keyed ``horizon=`` mode's span-start primitive:
+    row j's in-horizon window is ``[search(lo_j, j, ts_j - horizon), j]``.
+    """
+    C = ts.shape[0]
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    left, right = lo, hi + 1  # invariant: first-exceeding in [left, right]
+    # a width-C range needs bit_length(C) floor-halvings to reach width 0
+    rounds = max(int(C).bit_length(), 1)
+    for _ in range(rounds):
+        mid = (left + right) // 2
+        go_left = ts[jnp.clip(mid, 0, C - 1)] > thr
+        narrow = left < right
+        left = jnp.where(narrow & ~go_left, mid + 1, left)
+        right = jnp.where(narrow & go_left, mid, right)
+    return left

@@ -446,6 +446,11 @@ class KeyedTelemetry:
       window: count window length per key.
       slots: hot-set bound (keys live concurrently; LRU beyond that).
       ttl: optional idle eviction, in units of the ``ts`` passed to observe.
+      horizon: optional event-time window span — metrics fold only
+        observations with ``ts > ts_now - horizon`` (capped at the last
+        ``window`` per key; see :class:`repro.core.keyed.KeyedWindowStore`).
+        Requires passing ``ts`` to observe with per-key non-decreasing
+        timestamps.
       prepare: optional traced map from raw per-row input to the per-metric
         value dict, fused into the dispatch.
       chunk: default bulk chunk length (ragged chunks pad to it).
@@ -458,6 +463,7 @@ class KeyedTelemetry:
         slots: int,
         *,
         ttl: Optional[float] = None,
+        horizon: Optional[float] = None,
         prepare: Optional[Callable] = None,
         chunk: int = 256,
     ):
@@ -472,7 +478,8 @@ class KeyedTelemetry:
         # checkpointing — a donated update would delete those buffers out
         # from under the checkpoint payload.
         self._engine = KeyedChunkedStream(
-            self.monoid, self.window, self.slots, chunk, ttl=ttl, donate=False
+            self.monoid, self.window, self.slots, chunk, ttl=ttl,
+            horizon=horizon, donate=False
         )
         self._state = self._engine.init_state()
         self._query_jit = jax.jit(self._engine.store.query)

@@ -138,7 +138,19 @@ combines = CounterGroup(
     keys=("eventtime", "keyed"),
 )
 
-GROUPS: Tuple[CounterGroup, ...] = (admission, combines)
+# which release branch EventTimeChunkedStream took per chunk
+# (engines built with instrument_release=True): fast = in-order append at
+# the frontier, zero sort dispatches; slow = bounded sort + rank merge
+releases = CounterGroup(
+    "swag_release_branch",
+    label="branch",
+    help="event-time release dispatches per lax.cond branch "
+         "(fast = in-order frontier append, no sort; slow = bounded "
+         "stable sort + rank merge of the trailing region)",
+    keys=("fast", "slow"),
+)
+
+GROUPS: Tuple[CounterGroup, ...] = (admission, combines, releases)
 
 
 def read_all() -> Dict[str, Dict[str, int]]:

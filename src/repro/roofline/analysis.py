@@ -301,6 +301,7 @@ def eventtime_release_cost(
     chunk: int,
     capacity: int,
     *,
+    distance: int = 0,
     value_bytes: int = 4,
     batch: int = 1,
     backend: Optional[str] = None,
@@ -310,9 +311,18 @@ def eventtime_release_cost(
     Models the steady-state traffic of
     :class:`repro.core.event_time.EventTimeChunkedStream` per chunk of P
     released rows merged into a W-row window (``M = W + P`` merged
-    positions, ``batch`` value lanes per position):
+    positions, ``batch`` value lanes per position).  The release stage is
+    DISTANCE-AWARE (the disorder-adaptive path of
+    :mod:`repro.core.ooo_index`): ``distance`` is the maximum out-of-order
+    displacement ``d`` of the chunk's rows —
 
-      * chunk sort + searchsorted passes: ``~log2`` passes over (P,) lanes;
+      * ``d = 0`` (the ``lax.cond`` fast branch): no sort at all, just the
+        comparison-free ``compact_perm`` index build plus its gather —
+        2 passes over the (P,) pending lanes;
+      * ``d > 0``: a stable sort whose comparison depth scales with the
+        disordered region ``min(P, 2d)`` — ``log2`` passes over (P,)
+        lanes plus the sorted gather (cf. the d-bounded costs of
+        arXiv 1810.11308 / 2307.11210);
       * merge gather dual: merged timestamps + aggregates assembled by two
         position gathers (no scatters — see the module docstring);
       * flip boundary orbit: gather-only binary lifting, ``log2(M)``
@@ -324,7 +334,8 @@ def eventtime_release_cost(
       * eviction re-gather of the W-row window.
 
     Same return shape as :func:`keyed_update_cost`; ``items_per_s_bound``
-    counts P·batch items per dispatch.
+    counts P·batch items per dispatch.  ``stages["release"]`` holds
+    whichever release term applies (compact or sort).
     """
     import math
 
@@ -336,16 +347,22 @@ def eventtime_release_cost(
     P = int(chunk)
     W = int(capacity)
     M = W + P
+    d = max(int(distance), 0)
     vb = value_bytes * max(int(batch), 1)
-    lg_p = max(math.ceil(math.log2(max(P, 2))), 1)
     lg_m = max(math.ceil(math.log2(max(M, 2))), 1)
 
-    b_sort = 2.0 * P * 4 * lg_p                # chunk sort + searchsorted
+    if d == 0:
+        # compact_perm: index arithmetic + one permutation gather
+        b_release = 2.0 * P * (vb + 4)
+    else:
+        region = min(P, max(2 * d, 2))
+        lg_d = max(math.ceil(math.log2(region)), 1)
+        b_release = 2.0 * P * 4 * lg_d + P * (vb + 4)
     b_merge = 3.0 * M * (vb + 4)               # gather-dual ts+agg assembly
     b_orbit = 2.0 * M * 4 * lg_m               # binary-lifting hop levels
     b_sweep = 4.0 * M * (vb + 4)               # seg suffix + prefix scans
     b_evict = 2.0 * W * (vb + 4)               # window re-gather
-    total = b_sort + b_merge + b_orbit + b_sweep + b_evict
+    total = b_release + b_merge + b_orbit + b_sweep + b_evict
     t_mem = total / bw
     items = P * max(int(batch), 1)
     return {
@@ -355,12 +372,55 @@ def eventtime_release_cost(
         "bw": bw,
         "backend": backend,
         "stages": {
-            "sort": b_sort,
+            "release": b_release,
             "merge": b_merge,
             "orbit": b_orbit,
             "sweep": b_sweep,
             "evict": b_evict,
         },
+    }
+
+
+def keyed_horizon_cost(
+    chunk: int,
+    window: int,
+    *,
+    value_bytes: int = 4,
+    probes: int = 32,
+    backend: Optional[str] = None,
+) -> dict:
+    """Memory-bound roofline for one keyed ``update_chunk`` dispatch in
+    event-time ``horizon=`` mode — :func:`keyed_update_cost` plus the two
+    extra traffic terms the mode adds:
+
+      * lane timestamps: ONE (C, h) f32 ``carry_ts`` row gather + ONE
+        batched scatter (the ts mirror of the carry traffic);
+      * span-start finger search: ``bit_length(C)`` rounds of one (C,)
+        timestamp gather each (:func:`repro.core.ooo_index
+        .seg_bounded_search`).
+
+    Same return shape; ``stages`` gains ``lane_ts`` / ``search``.
+    """
+    import math
+
+    base = keyed_update_cost(
+        chunk, window, value_bytes=value_bytes, probes=probes,
+        backend=backend,
+    )
+    C = int(chunk)
+    h = max(int(window) - 1, 0)
+    lg_c = max(math.ceil(math.log2(max(C, 2))), 1)
+    b_ts = 2.0 * C * h * 4                     # carry_ts gather + scatter
+    b_search = C * 4.0 * (lg_c + 1)            # finger-search gather rounds
+    total = base["bytes_per_chunk"] + b_ts + b_search
+    t_mem = total / base["bw"]
+    return {
+        "bytes_per_chunk": total,
+        "t_memory": t_mem,
+        "items_per_s_bound": C / t_mem if t_mem > 0 else 0.0,
+        "bw": base["bw"],
+        "backend": base["backend"],
+        "stages": dict(base["stages"], lane_ts=b_ts, search=b_search),
     }
 
 

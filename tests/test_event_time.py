@@ -532,3 +532,99 @@ def test_stream_continuation_across_calls():
     second = eng.stream(jnp.asarray(ts[25:]), xs[25:], state=first.state)
     got = np.concatenate([np.asarray(first.ys), np.asarray(second.ys)])
     assert np.array_equal(got, np.asarray(full.ys))
+
+
+# ---------------------------------------------------------------------------
+# Disorder-adaptive release path
+# ---------------------------------------------------------------------------
+
+
+def _adversarial_max_late(T, slack, *, seed):
+    """Every other row delayed by EXACTLY ``slack``: each chunk mixes
+    frontier rows with maximally-late ones, so no chunk is in-order and the
+    bounded merge runs at its admissible-distance ceiling.  (An all-equal
+    delay would leave the stream in-order — the alternation is the point.)"""
+    r = np.random.default_rng(seed)
+    ts = np.sort(r.integers(0, 3 * T, T)).astype(np.float32)
+    delay = np.float32(slack) * (np.arange(T) % 2).astype(np.float32)
+    order = np.argsort(ts + delay, kind="stable")
+    return ts[order], order
+
+
+@pytest.mark.parametrize("mname", ["affine_i32", "m4_int", "argmax"])
+@pytest.mark.parametrize("disorder", [0.0, 0.1, 0.5, "max_late"])
+def test_adaptive_release_path_bit_exact(mname, disorder):
+    """The disorder-adaptive release path (no-sort compact merge at d = 0,
+    bounded merge above) is invisible in the outputs: bit-exact vs the
+    in-order reference for NON-commutative monoids across disorder levels —
+    including the adversarial alternating maximally-late stream — with a
+    ragged final chunk (T % chunk != 0)."""
+    m, mk, _ = MONOID_CASES[mname]
+    T, B, slack = 75, 2, 9.0
+    seed = sum(map(ord, mname)) + (97 if disorder == "max_late"
+                                   else int(disorder * 10))
+    if disorder == "max_late":
+        ats, order = _adversarial_max_late(T, slack, seed=seed)
+    else:
+        ats, order = _disordered(T, disorder, slack, seed=seed)
+    xs = mk((T, B))
+    axs = jax.tree.map(lambda a: a[order], xs)
+    horizon = 21.0
+    eng = EventTimeChunkedStream(m, horizon, slack=slack, chunk=16,
+                                 capacity=160, buffer=64)
+    res = eng.stream(jnp.asarray(ats), axs)
+    assert res.n_late == 0 and res.n_dropped == 0
+    ref_ts, ref_ys = in_order_reference(m, ats, axs, horizon)
+    assert np.array_equal(res.ts, ref_ts)
+    _assert_tree_close(res.ys, ref_ys, exact=True, ctx=(mname, disorder))
+
+
+def test_release_branch_counters_zero_sorts_in_order():
+    """Fast-path regression guard: an in-order stream must dispatch ZERO
+    sorting (slow) release branches — every chunk, including the flush
+    drain, rides the no-sort compact merge — while a disordered stream must
+    take the slow branch at least once.  Branch taken is counted per chunk
+    in ``obs.counters.releases`` when ``instrument_release=True``."""
+    m = monoids.sum_monoid(jnp.int32)
+    T, B = 96, 1
+    ts = np.sort(rng.uniform(0, 200.0, T)).astype(np.float32)
+    xs = _scalar_vals((T, B), jnp.int32)
+    eng = EventTimeChunkedStream(m, 20.0, slack=4.0, chunk=16, capacity=96,
+                                 buffer=32, instrument_release=True)
+    obs_counters.releases.reset()
+    res = eng.stream(jnp.asarray(ts), xs)
+    counts = obs_counters.releases.read()  # read() barriers the callbacks
+    assert counts["slow"] == 0
+    assert counts["fast"] >= T // 16  # every full chunk counted
+    ref_ts, ref_ys = in_order_reference(m, ts, xs, 20.0)
+    assert np.array_equal(res.ts, ref_ts)
+    _assert_tree_close(res.ys, ref_ys, exact=True)
+
+    ats, order = _disordered(T, 0.5, 4.0, seed=3)
+    axs = jax.tree.map(lambda a: a[order], xs)
+    obs_counters.releases.reset()
+    eng.stream(jnp.asarray(ats), axs)
+    counts = obs_counters.releases.read()
+    assert counts["slow"] > 0
+
+
+def test_ooo_distance_gauges_track_measured_disorder():
+    """``obs_metrics`` exposes the measured out-of-order distance of recent
+    chunks: zero across an in-order stream, positive once a disordered one
+    has been processed (the slow branch records the exact displacement)."""
+    m = monoids.sum_monoid(jnp.int32)
+    T = 64
+    ts = np.sort(rng.uniform(0, 100.0, T)).astype(np.float32)
+    xs = _scalar_vals((T, 1), jnp.int32)
+    eng = EventTimeChunkedStream(m, 20.0, slack=8.0, chunk=16, capacity=96,
+                                 buffer=64)
+    res = eng.stream(jnp.asarray(ts), xs)
+    metrics = eng.obs_metrics(res.state)
+    assert int(metrics["ooo_distance_max"]) == 0
+    assert float(metrics["ooo_distance_p95"]) == 0.0
+
+    ats, order = _disordered(T, 0.5, 8.0, seed=11)
+    axs = jax.tree.map(lambda a: a[order], xs)
+    res = eng.stream(jnp.asarray(ats), axs)
+    metrics = eng.obs_metrics(res.state)
+    assert int(metrics["ooo_distance_max"]) > 0

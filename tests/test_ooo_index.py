@@ -1,0 +1,253 @@
+"""Unit tests for the vectorized finger-style tail index (core/ooo_index).
+
+Each primitive is checked against a plain-numpy reference on randomized
+inputs, with the sentinel/padding edge cases the engine relies on: live
+prefixes shorter than the buffer, all-padding chunks, watermark splits that
+release nothing/everything, tie discipline in the merges, and full-range
+finger searches (the case an off-by-one in the binary-search round count
+would miss).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import monoids, ooo_index
+
+rng = np.random.default_rng(21)
+
+TMAX = np.float32(np.finfo(np.float32).max)
+
+
+def _padded(vals, total, fill):
+    out = np.full(total, fill, np.float32)
+    out[: len(vals)] = vals
+    return out
+
+
+# ---------------------------------------------------------------------------
+# chunk_in_order
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "ts,frontier,want",
+    [
+        ([1.0, 2.0, 2.0, 5.0], 1.0, True),
+        ([1.0, 2.0, 2.0, 5.0], 1.5, False),   # below frontier
+        ([1.0, 3.0, 2.0, 5.0], 0.0, False),   # not sorted
+        ([2.0, 3.0, TMAX, TMAX], 2.0, True),  # sentinel tail passes
+        ([2.0, TMAX, 3.0, TMAX], 2.0, False), # interior hole fails
+        ([TMAX, TMAX], 7.0, True),            # all-masked (flush) chunk
+    ],
+)
+def test_chunk_in_order(ts, frontier, want):
+    got = ooo_index.chunk_in_order(
+        jnp.asarray(ts, jnp.float32), jnp.float32(frontier)
+    )
+    assert bool(got) is want
+
+
+# ---------------------------------------------------------------------------
+# displacement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_displacement_matches_brute_force(seed):
+    r = np.random.default_rng(seed)
+    n_live = int(r.integers(0, 12))
+    P = n_live + int(r.integers(0, 5))
+    ts = _padded(r.integers(0, 8, n_live).astype(np.float32), P, TMAX)
+    order = np.argsort(ts, kind="stable")
+    got = int(
+        ooo_index.displacement(
+            jnp.asarray(ts), jnp.asarray(order, jnp.int32), jnp.float32(TMAX)
+        )
+    )
+    want = 0
+    for i in range(n_live):
+        want = max(want, int(np.sum(ts[:i] > ts[i])))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# compact_perm / compact_sorted (the d = 0 no-sort merge)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_compact_sorted_matches_stable_sort(seed):
+    r = np.random.default_rng(100 + seed)
+    K, C = 6, 5
+    nb = int(r.integers(0, K + 1))
+    buf = np.sort(r.uniform(0, 10, nb)).astype(np.float32)
+    n_chunk = int(r.integers(0, C + 1))
+    lo = buf[-1] if nb else 0.0  # chunk at/above the buffer (the frontier)
+    chunk = np.sort(lo + r.uniform(0, 5, n_chunk)).astype(np.float32)
+    buf_ts = _padded(buf, K, TMAX)
+    ts_in = _padded(chunk, C, TMAX)
+    buf_agg = _padded(r.integers(0, 9, nb).astype(np.float32), K, 0.0)
+    chunk_agg = _padded(r.integers(0, 9, n_chunk).astype(np.float32), C, 0.0)
+
+    pend_ts, pend_agg = ooo_index.compact_sorted(
+        jnp.asarray(buf_ts), jnp.asarray(buf_agg),
+        jnp.asarray(ts_in), jnp.asarray(chunk_agg),
+        tmax=jnp.float32(TMAX), ident=jnp.float32(0.0),
+    )
+    # reference: stable sort of the concatenation (buffer first on ties)
+    cat_ts = np.concatenate([buf_ts, ts_in])
+    cat_agg = np.concatenate([buf_agg, chunk_agg])
+    o = np.argsort(cat_ts, kind="stable")
+    want_ts, want_agg = cat_ts[o], cat_agg[o]
+    want_agg[want_ts >= TMAX] = 0.0
+    assert np.array_equal(np.asarray(pend_ts), want_ts)
+    assert np.array_equal(np.asarray(pend_agg), want_agg)
+
+
+def test_sort_pending_tie_discipline():
+    """Buffer rows precede same-ts chunk rows; chunk keeps arrival order."""
+    buf_ts = jnp.asarray([2.0, 2.0, TMAX], jnp.float32)
+    buf_agg = jnp.asarray([10.0, 11.0, 0.0])
+    ts_in = jnp.asarray([2.0, 1.0, 2.0], jnp.float32)
+    chunk_agg = jnp.asarray([20.0, 21.0, 22.0])
+    pend_ts, pend_agg, _ = ooo_index.sort_pending(
+        buf_ts, buf_agg, ts_in, chunk_agg
+    )
+    assert np.array_equal(
+        np.asarray(pend_agg), [21.0, 10.0, 11.0, 20.0, 22.0, 0.0]
+    )
+    assert np.array_equal(
+        np.asarray(pend_ts), [1.0, 2.0, 2.0, 2.0, 2.0, TMAX]
+    )
+
+
+# ---------------------------------------------------------------------------
+# release_split
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_release_split_matches_reference(seed):
+    r = np.random.default_rng(200 + seed)
+    P, K = 9, 4
+    n_live = int(r.integers(0, P + 1))
+    live = np.sort(r.integers(0, 12, n_live)).astype(np.float32)
+    pend_ts = _padded(live, P, TMAX)
+    pend_agg = _padded(r.integers(1, 9, n_live).astype(np.float32), P, 0.0)
+    wm = np.float32(r.integers(-1, 13))
+
+    rel_ts, rel_agg, rel, buf_ts, buf_agg, ovf = ooo_index.release_split(
+        jnp.asarray(pend_ts), jnp.asarray(pend_agg), jnp.float32(wm),
+        buffer=K, tmax=jnp.float32(TMAX), ident=jnp.float32(0.0),
+    )
+    n_rel = int(np.sum(live <= wm))
+    rest = live[n_rel:]
+    assert np.array_equal(np.asarray(rel), np.arange(P) < n_rel)
+    assert np.array_equal(np.asarray(rel_ts), _padded(live[:n_rel], P, TMAX))
+    assert np.array_equal(
+        np.asarray(rel_agg), _padded(pend_agg[:n_rel], P, 0.0)
+    )
+    assert np.array_equal(
+        np.asarray(buf_ts), _padded(rest[:K], K, TMAX)
+    )
+    assert np.array_equal(
+        np.asarray(buf_agg), _padded(pend_agg[n_rel:n_rel + min(len(rest), K)], K, 0.0)
+    )
+    assert int(ovf) == max(len(rest) - K, 0)
+
+
+# ---------------------------------------------------------------------------
+# rank_merge / append_merge
+# ---------------------------------------------------------------------------
+
+TS_MIN = np.float32(np.finfo(np.float32).min)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_rank_merge_matches_stable_sort(seed):
+    r = np.random.default_rng(300 + seed)
+    W, P = 7, 5
+    nw = int(r.integers(0, W + 1))
+    nr = int(r.integers(0, P + 1))
+    win = np.sort(r.integers(0, 8, nw)).astype(np.float32)
+    rel = np.sort(r.integers(0, 8, nr)).astype(np.float32)
+    win_ts = np.full(W, TS_MIN, np.float32)
+    win_ts[W - nw:] = win  # window pads LEAD (TS_MIN in front)
+    win_agg = np.zeros(W, np.float32)
+    win_agg[W - nw:] = r.integers(1, 9, nw)
+    rel_ts = _padded(rel, P, TMAX)
+    rel_agg = _padded(r.integers(10, 19, nr).astype(np.float32), P, 0.0)
+
+    mts, magg, pos_rel = ooo_index.rank_merge(
+        jnp.asarray(win_ts), jnp.asarray(win_agg),
+        jnp.asarray(rel_ts), jnp.asarray(rel_agg),
+    )
+    # reference: stable sort of [window, released] — window first on ties
+    cat_ts = np.concatenate([win_ts, rel_ts])
+    cat_agg = np.concatenate([win_agg, rel_agg])
+    o = np.argsort(cat_ts, kind="stable")
+    assert np.array_equal(np.asarray(mts), cat_ts[o])
+    assert np.array_equal(np.asarray(magg), cat_agg[o])
+    inv = np.argsort(o)
+    assert np.array_equal(np.asarray(pos_rel), inv[W:])
+
+
+def test_append_merge_positions():
+    win_ts = jnp.asarray([TS_MIN, 1.0, 3.0], jnp.float32)
+    win_agg = jnp.asarray([0.0, 5.0, 6.0])
+    rel_ts = jnp.asarray([3.0, 4.0, TMAX], jnp.float32)
+    rel_agg = jnp.asarray([7.0, 8.0, 0.0])
+    mts, magg, pos_rel = ooo_index.append_merge(
+        win_ts, win_agg, rel_ts, rel_agg
+    )
+    assert np.array_equal(np.asarray(mts), [TS_MIN, 1.0, 3.0, 3.0, 4.0, TMAX])
+    assert np.array_equal(np.asarray(magg), [0.0, 5.0, 6.0, 7.0, 8.0, 0.0])
+    assert np.array_equal(np.asarray(pos_rel), [3, 4, 5])
+
+
+# ---------------------------------------------------------------------------
+# seg_bounded_search
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C", [1, 2, 3, 5, 8, 33, 64])
+def test_seg_bounded_search_matches_reference(C):
+    r = np.random.default_rng(400 + C)
+    # per-segment sorted ts with random segment layout
+    n_seg = int(r.integers(1, C + 1))
+    heads = np.sort(r.choice(C, n_seg, replace=False))
+    heads[0] = 0
+    ts = np.empty(C, np.float32)
+    bounds = list(heads) + [C]
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        ts[s:e] = np.sort(r.integers(0, 6, e - s))
+    sid = np.searchsorted(heads, np.arange(C), side="right") - 1
+    lo = heads[sid]
+    hi = np.arange(C)
+    thr = r.integers(-1, 7, C).astype(np.float32)
+
+    got = np.asarray(
+        ooo_index.seg_bounded_search(
+            jnp.asarray(ts), jnp.asarray(lo, jnp.int32),
+            jnp.asarray(hi, jnp.int32), jnp.asarray(thr),
+        )
+    )
+    for j in range(C):
+        want = hi[j] + 1
+        for i in range(lo[j], hi[j] + 1):
+            if ts[i] > thr[j]:
+                want = i
+                break
+        assert got[j] == want, (C, j, lo[j], hi[j], thr[j], ts[lo[j]:hi[j] + 1])
+
+
+def test_seg_bounded_search_full_range_tiny():
+    """C=2 full-range search — the case one missing bisection round breaks."""
+    ts = jnp.asarray([1.0, 2.0], jnp.float32)
+    got = ooo_index.seg_bounded_search(
+        ts, jnp.asarray([0, 0], jnp.int32), jnp.asarray([1, 1], jnp.int32),
+        jnp.asarray([1.5, 0.0], jnp.float32),
+    )
+    assert np.array_equal(np.asarray(got), [1, 0])

@@ -121,7 +121,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: latency,throughput,dynamic,eventtime,"
-                         "batched,chunked,keyed,roofline")
+                         "batched,chunked,keyed,service,roofline")
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<name>.json summaries")
@@ -149,7 +149,11 @@ def main() -> None:
     def done(name, rows):
         all_rows.extend(rows or [])
         if not args.no_json:
-            emit_json(name, rows, args.out_dir)
+            # --quick runs smaller configurations: write (and stamp) them as
+            # BENCH_<name>_quick.json so a quick run can never clobber the
+            # committed full-scale baselines
+            emit_json(name + ("_quick" if args.quick else ""), rows,
+                      args.out_dir)
 
     if args.tune:
         from benchmarks import bench_keyed
@@ -237,6 +241,17 @@ def main() -> None:
         else:
             rows = bench_keyed.main()
         done("keyed", rows)
+    if on("service"):
+        from benchmarks import bench_service
+
+        print("# beyond-paper — multi-tenant analytics service (live HTTP)")
+        if args.quick:
+            rows = bench_service.main(tenants=2, n_per_tenant=6000,
+                                      batch=128, universe=256,
+                                      quota_rows=1500)
+        else:
+            rows = bench_service.main()
+        done("service", rows)
     if on("roofline"):
         print("# §Roofline — dry-run derived table")
         rows = roofline_table.main()

@@ -574,15 +574,94 @@ def kll_quantiles(agg: PyTree, qs) -> jax.Array:
     return jnp.stack(outs, axis=-1)
 
 
+def topk_monoid(k: int = 8, count_dtype=jnp.int32) -> Monoid:
+    """SpaceSaving-style fixed-shape heavy hitters over int32 keys.
+
+    Agg = ``{"keys": (k,) int32 (-1 = empty), "counts": (k,)}`` held in
+    canonical order (count descending, key ascending on ties — every
+    ``combine`` re-canonicalizes, so equal multisets have equal
+    representations).  ``combine`` merges the two summaries exactly —
+    matching keys sum their counts (a fixed-shape k×k equality match, k is
+    small) — then keeps the ``k`` heaviest survivors; the tail truncation
+    is the SpaceSaving-style approximation.  Like :func:`kll_monoid`,
+    everything is fixed-shape ``where``/``sort`` — jit/vmap/scan-safe, a
+    valid telemetry product-monoid member, and usable as a per-key window
+    lane in the keyed store.
+
+    Guarantees: exact (and bit-exactly associative/commutative) while the
+    union holds ≤ k distinct keys; beyond that, kept counts are lower
+    bounds and a key with true frequency above the dropped tail's max
+    stays resident — the usual heavy-hitter contract.  ``lift`` takes a
+    non-negative int32 key; use :func:`topk_items` to read an Agg.
+    """
+
+    kk = int(k)
+
+    def identity():
+        return {
+            "keys": jnp.full((kk,), -1, jnp.int32),
+            "counts": jnp.zeros((kk,), count_dtype),
+        }
+
+    def lift(e):
+        return {
+            "keys": jnp.full((kk,), -1, jnp.int32).at[0].set(
+                jnp.asarray(e, jnp.int32)
+            ),
+            "counts": jnp.zeros((kk,), count_dtype).at[0].set(1),
+        }
+
+    def combine(a, b):
+        ak, bk = a["keys"], b["keys"]
+        # k×k key match: b's count folds into a's matching entry, matched
+        # b entries are zeroed (canonical inputs hold each key at most once)
+        eq = (ak[..., :, None] == bk[..., None, :]) & (ak[..., :, None] >= 0)
+        a_cnt = a["counts"] + jnp.sum(
+            jnp.where(eq, b["counts"][..., None, :], 0), axis=-1
+        )
+        b_cnt = jnp.where(jnp.any(eq, axis=-2), 0, b["counts"])
+        keys = jnp.concatenate([ak, bk], axis=-1)
+        cnts = jnp.concatenate([a_cnt, b_cnt], axis=-1)
+        keys = jnp.where(cnts > 0, keys, -1)
+        cnts = jnp.where(keys >= 0, cnts, 0)
+        # canonical order: count desc, key asc on ties (empties sort last);
+        # keep the k heaviest
+        order = jnp.lexsort((keys, -cnts), axis=-1)
+        keys = jnp.take_along_axis(keys, order, axis=-1)[..., :kk]
+        cnts = jnp.take_along_axis(cnts, order, axis=-1)[..., :kk]
+        return {"keys": keys, "counts": cnts}
+
+    return Monoid(
+        name=f"topk{kk}",
+        identity=identity,
+        combine=combine,
+        lift=lift,
+        lower=lambda v: v,
+        commutative=True,
+        invertible=False,
+    )
+
+
+def topk_items(agg: PyTree) -> list:
+    """``[(key, count), ...]`` of a :func:`topk_monoid` Agg, heaviest first
+    (host-side; empty slots elided)."""
+    keys = np.asarray(agg["keys"]).ravel()
+    counts = np.asarray(agg["counts"]).ravel()
+    live = keys >= 0
+    return list(zip(keys[live].tolist(), counts[live].tolist()))
+
+
 def hll_monoid(num_registers: int = 64) -> Monoid:
     """HyperLogLog-style register-max sketch; combine = elementwise max."""
 
     def lift(e):
         h = _hash_u32(jnp.asarray(e), 0)
         reg = (h % num_registers).astype(jnp.int32)
-        # rank = leading-zero count of the remaining bits, +1
+        # rank = leading-zero count of the remaining bits, +1: rank r with
+        # probability 2^-r, the distribution hll_estimate's harmonic-mean
+        # estimator assumes (the old +2 shift biased estimates ~2x high)
         rest = _hash_u32(jnp.asarray(e), 1)
-        rank = 32 - jnp.floor(jnp.log2(rest.astype(jnp.float32) + 2.0)).astype(jnp.int32) + 1
+        rank = 32 - jnp.floor(jnp.log2(rest.astype(jnp.float32) + 1.0)).astype(jnp.int32)
         regs = jnp.zeros((num_registers,), jnp.int32)
         return regs.at[reg].set(rank)
 
@@ -595,6 +674,19 @@ def hll_monoid(num_registers: int = 64) -> Monoid:
         commutative=True,
         invertible=False,
     )
+
+
+def hll_estimate(regs) -> jax.Array:
+    """Distinct-count estimate from a :func:`hll_monoid` Agg (register
+    array, batch axes broadcast) — the standard harmonic-mean estimator
+    with the small-range linear-counting correction."""
+    regs = jnp.asarray(regs)
+    m = regs.shape[-1]
+    alpha = 0.7213 / (1.0 + 1.079 / m)
+    raw = alpha * m * m / jnp.sum(2.0 ** (-regs.astype(jnp.float32)), axis=-1)
+    zeros = jnp.sum(regs == 0, axis=-1)
+    linear = m * jnp.log(m / jnp.maximum(zeros, 1).astype(jnp.float32))
+    return jnp.where((raw <= 2.5 * m) & (zeros > 0), linear, raw)
 
 
 # ---------------------------------------------------------------------------
@@ -733,6 +825,7 @@ def product_monoid(members: dict[str, Monoid]) -> Monoid:
 
 _REGISTRY: dict[str, Callable[[], Monoid]] = {
     "sum": sum_monoid,
+    "sum_i32": functools.partial(sum_monoid, jnp.int32),
     "sum_i64": functools.partial(sum_monoid, jnp.int64),
     "count": count_monoid,
     "mean": mean_monoid,
@@ -749,6 +842,7 @@ _REGISTRY: dict[str, Callable[[], Monoid]] = {
     "countmin": countmin_monoid,
     "hll": hll_monoid,
     "kll": kll_monoid,
+    "topk": topk_monoid,
     "affine_i32": affine_int_monoid,
     "mat2x2": matrix_monoid,
 }

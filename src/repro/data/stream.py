@@ -10,7 +10,10 @@ event-time windowing engine (:mod:`repro.core.event_time`) and its
 equivalence tests/benchmarks.  ``KeyedEventStream`` adds the key dimension:
 Zipf-distributed tenant ids over a configurable universe with the same
 bounded-disorder arrival model — the feed for the keyed window store
-(:mod:`repro.core.keyed`).
+(:mod:`repro.core.keyed`).  ``MultiTenantEventStream`` adds the tenant
+dimension on top: independent per-tenant Zipf-keyed substreams with their
+own event clocks and rate scales — the load-generator feed for the
+streaming analytics service (:mod:`repro.service`).
 
 ``WindowedStreamStats`` runs the paper's aggregators over the live stream:
 Bloom-filter windowed dedup (non-invertible OR monoid) and min/max/mean
@@ -213,6 +216,73 @@ class KeyedEventStream:
         keys, _, _, _ = self._event_order()
         uniq, counts = np.unique(keys, return_counts=True)
         return uniq[np.argsort(-counts)][:top]
+
+
+class MultiTenantEventStream:
+    """The tenant dimension over :class:`KeyedEventStream`: ``tenants``
+    independent Zipf-keyed substreams, one per tenant, each a pure function
+    of ``(seed, tenant)`` — the load-generator feed for the streaming
+    analytics service (:mod:`repro.service`) and its benchmark.
+
+    Every tenant gets its own Poisson event clock (timestamps non-decreasing
+    per tenant — the keyed store's event-time precondition when
+    ``disorder=0``), its own Zipf key marginal over ``universe`` ids, and a
+    per-tenant ``rate_scale`` so quota scenarios can drive one tenant hotter
+    than the rest.  :meth:`batches` yields host-side numpy batches (the HTTP
+    client serializes them as JSON rows), so no device work happens in the
+    generator.
+    """
+
+    def __init__(
+        self,
+        tenants: int,
+        n_per_tenant: int,
+        universe: int,
+        *,
+        zipf_a: float = 1.2,
+        mean_gap: float = 1.0,
+        disorder: float = 0.0,
+        slack: float = 8.0,
+        rate_scales: Optional[list] = None,
+        integer_values: bool = True,
+        seed: int = 0,
+    ):
+        self.tenants = int(tenants)
+        self.n_per_tenant = int(n_per_tenant)
+        if rate_scales is None:
+            rate_scales = [1.0] * self.tenants
+        if len(rate_scales) != self.tenants:
+            raise ValueError("rate_scales must have one entry per tenant")
+        self._streams = [
+            KeyedEventStream(
+                n_per_tenant,
+                universe,
+                zipf_a=zipf_a,
+                # a hotter tenant = denser event clock
+                mean_gap=mean_gap / float(rate_scales[i]),
+                disorder=disorder,
+                slack=slack,
+                integer_values=integer_values,
+                seed=seed + 9973 * i,
+            )
+            for i in range(self.tenants)
+        ]
+
+    def tenant(self, i: int) -> KeyedEventStream:
+        return self._streams[i]
+
+    def arrival_host(self, i: int):
+        """Tenant ``i``'s full ``(keys, ts, xs)`` in arrival order as numpy
+        arrays (host-side; the generator feeds an HTTP client)."""
+        keys, ts, xs, order = self._streams[i]._event_order()
+        return keys[order], ts[order], xs[order]
+
+    def batches(self, i: int, batch: int) -> Iterator[tuple]:
+        """Tenant ``i``'s stream as ``(keys, ts, xs)`` numpy batches of
+        ``batch`` rows (last one ragged)."""
+        keys, ts, xs = self.arrival_host(i)
+        for lo in range(0, len(keys), batch):
+            yield keys[lo:lo + batch], ts[lo:lo + batch], xs[lo:lo + batch]
 
 
 class WindowedStreamStats:

@@ -135,6 +135,7 @@ class KLLHistogram:
         self._agg = self._m.identity()
         self._buf: List[float] = []
         self._lock = threading.Lock()
+        self._drain_lock = threading.Lock()
         self.count = 0
         self.sum = 0.0
         self._drain_jits: Dict[int, Callable] = {}
@@ -180,22 +181,29 @@ class KLLHistogram:
         return fn
 
     def drain(self) -> None:
-        """Fold the pending buffer into the sketch: ONE jitted dispatch."""
-        with self._lock:
-            buf, self._buf = self._buf, []
-        if not buf:
-            return
-        import jax.numpy as jnp
+        """Fold the pending buffer into the sketch: ONE jitted dispatch.
 
-        n = 1
-        while n < len(buf):
-            n *= 2
-        vals = np.zeros(n, np.float32)
-        vals[: len(buf)] = buf
-        mask = np.arange(n) < len(buf)
-        self._agg = self._drain_fn(n)(
-            self._agg, jnp.asarray(vals), jnp.asarray(mask)
-        )
+        ``_drain_lock`` serializes the whole pop→fold→assign sequence:
+        two concurrent scrapes would otherwise pop disjoint buffers but
+        race the unlocked ``_agg`` read-modify-write, silently losing one
+        fold.  ``observe()`` only ever takes the buffer lock, so the hot
+        path never waits on a device dispatch."""
+        with self._drain_lock:
+            with self._lock:
+                buf, self._buf = self._buf, []
+            if not buf:
+                return
+            import jax.numpy as jnp
+
+            n = 1
+            while n < len(buf):
+                n *= 2
+            vals = np.zeros(n, np.float32)
+            vals[: len(buf)] = buf
+            mask = np.arange(n) < len(buf)
+            self._agg = self._drain_fn(n)(
+                self._agg, jnp.asarray(vals), jnp.asarray(mask)
+            )
 
     def quantile_values(self):
         """Device array of the configured quantiles (drains first)."""

@@ -1,0 +1,25 @@
+"""Multi-tenant streaming analytics service over the keyed window engines.
+
+The front door that turns :mod:`repro.core` from a library into a service:
+HTTP ingestion with per-tenant quotas and backpressure, a single batched
+consumer draining into ONE shared :class:`repro.core.keyed
+.KeyedChunkedStream` (tenant-namespaced keys, event-time windows), per-
+tenant rollup sketches (quantiles / distinct keys / heavy hitters), and a
+query + metrics surface.  See :mod:`repro.service.core` for the design
+rules.
+"""
+
+from repro.service.config import ServiceConfig
+from repro.service.core import AnalyticsService
+from repro.service.http import ServiceHTTPServer
+from repro.service.tenancy import Batch, TenantState, TokenBucket, validate_batch
+
+__all__ = [
+    "AnalyticsService",
+    "Batch",
+    "ServiceConfig",
+    "ServiceHTTPServer",
+    "TenantState",
+    "TokenBucket",
+    "validate_batch",
+]

@@ -1,0 +1,82 @@
+"""Service configuration — the one knob surface for :mod:`repro.service`.
+
+Everything the multi-tenant streaming analytics service does is gated
+here: the windowed-aggregation engine shape (monoid, per-key window
+capacity, event-time horizon, slot pool, chunk size), the tenant key
+namespace split, admission quotas (token buckets), queue bounds and the
+global backpressure high-watermark, and the per-tenant rollup sketches
+(value quantiles / distinct keys / heavy hitters).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs for :class:`repro.service.core.AnalyticsService`.
+
+    Key namespacing: tenant ``idx`` and raw key ``k`` map to the engine key
+    ``(idx << key_bits) | k``, so per-tenant key spaces are disjoint inside
+    ONE shared :class:`repro.core.keyed.KeyedChunkedStream`.  Raw keys must
+    satisfy ``0 <= k < 2**key_bits`` (enforced at ingest with a 400) and
+    the namespaced key must stay below ``2**31`` (int32, non-negative), so
+    ``max_tenants <= 2**(31 - key_bits)``.
+    """
+
+    # -- engine ------------------------------------------------------------
+    monoid: str = "sum_i32"            # repro.core.monoids registry name
+    window: int = 256                  # per-key window capacity (elements)
+    horizon: Optional[float] = 64.0    # event-time span (ts units); None =
+                                       # count windows
+    slots: int = 8192                  # shared hot-key pool (LRU beyond)
+    chunk: int = 1024                  # fused dispatch size (rows)
+    value_dtype: str = "i32"           # "i32" (bit-exact) or "f32"
+
+    # -- tenancy / namespacing --------------------------------------------
+    key_bits: int = 20                 # per-tenant key space = 2**key_bits
+    max_tenants: int = 64              # auto-registered on first ingest
+
+    # -- admission quotas (token bucket per tenant) -----------------------
+    quota_rows_per_s: float = 100_000.0
+    quota_burst: float = 20_000.0      # bucket capacity (rows)
+
+    # -- queueing / backpressure ------------------------------------------
+    max_batch: int = 512               # rows per POST (413 beyond)
+    tenant_queue_batches: int = 256    # bounded per-tenant queue (503 full)
+    global_rows_hw: int = 65_536       # pending-row high-watermark (503)
+
+    # -- per-tenant rollup sketches ---------------------------------------
+    rollup: bool = True
+    rollup_window: int = 32            # window of drained-CHUNK summaries
+    kll_k: int = 32
+    kll_levels: int = 6                # floor; auto-raised so the sketch
+                                       # capacity covers rollup_window*chunk
+    hll_registers: int = 64
+    topk_k: int = 8
+
+    # -- consumer ----------------------------------------------------------
+    idle_sleep_s: float = 0.002        # drain-thread wait when queues empty
+    latency_ring: int = 65_536         # exact ingest→queryable samples kept
+
+    def __post_init__(self):
+        if self.key_bits < 1 or self.key_bits > 30:
+            raise ValueError(f"key_bits must be in [1, 30], got {self.key_bits}")
+        if self.max_tenants > 2 ** (31 - self.key_bits):
+            raise ValueError(
+                f"max_tenants={self.max_tenants} overflows int32 keys with "
+                f"key_bits={self.key_bits} (max {2 ** (31 - self.key_bits)})"
+            )
+        if self.max_batch > self.chunk:
+            raise ValueError(
+                f"max_batch={self.max_batch} must be <= chunk={self.chunk} "
+                "(batches are drained whole into one fused dispatch)"
+            )
+        if self.value_dtype not in ("i32", "f32"):
+            raise ValueError(f"value_dtype must be i32|f32, got {self.value_dtype}")
+
+    @property
+    def key_limit(self) -> int:
+        return 1 << self.key_bits

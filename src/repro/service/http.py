@@ -1,0 +1,181 @@
+"""HTTP front-end for the multi-tenant streaming analytics service.
+
+Stdlib ``http.server`` only (the :class:`repro.obs.exporter.MetricsExporter`
+pattern — no new dependencies)::
+
+    POST /ingest                JSON {"tenant", "keys", "ts", "values"}
+                                → 200 {"accepted", "seq"}
+                                · 400/413 malformed/oversized
+                                · 429 over quota (Retry-After header)
+                                · 503 backpressure / tenant capacity
+    GET  /query?tenant=a[&keys=1,2&top=5]
+                                → tenant snapshot (window folds, rollup
+                                  quantiles/distinct/hot keys, counters)
+    GET  /stats                 → service totals + exact ingest→queryable
+                                  latency percentiles
+    GET  /metrics               → Prometheus exposition (requires
+                                  ``attach_obs``; 503 without)
+    GET  /healthz               → "ok"
+
+Handler threads only validate + enqueue (the service's ingest path is
+host-side numpy); every device dispatch stays on the service's single
+consumer thread, so concurrency here never races the engine.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import traceback
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Optional
+from urllib.parse import parse_qs, urlparse
+
+from repro.service.core import AnalyticsService
+
+PROM_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+MAX_BODY_BYTES = 4 << 20  # absolute request cap; cfg.max_batch rules rows
+
+
+class ServiceHTTPServer:
+    """Background HTTP server over an :class:`AnalyticsService`.
+
+    Does NOT own the service lifecycle by default: ``start()`` starts the
+    HTTP thread and — when the service's consumer is not yet running — the
+    service too (and ``stop()`` mirrors that).  ``port=0`` binds an
+    ephemeral port; read ``.port`` / ``.url`` after ``start()``.
+    """
+
+    def __init__(self, service: AnalyticsService, *, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.service = service
+        self.host = host
+        self._requested_port = port
+        self._server: Optional[ThreadingHTTPServer] = None
+        self._thread: Optional[threading.Thread] = None
+        self._owns_service = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "ServiceHTTPServer":
+        service = self.service
+        if service._thread is None:
+            service.start()
+            self._owns_service = True
+
+        class Handler(BaseHTTPRequestHandler):
+            def _reply(self, code: int, payload, headers=None,
+                       ctype: str = "application/json"):
+                body = (payload if isinstance(payload, bytes)
+                        else (json.dumps(payload) + "\n").encode("utf-8"))
+                self.send_response(code)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                for k, v in (headers or {}).items():
+                    self.send_header(k, v)
+                self.end_headers()
+                self.wfile.write(body)
+
+            def do_POST(self):  # noqa: N802 (http.server API)
+                if urlparse(self.path).path != "/ingest":
+                    self._reply(404, {"error": "POST /ingest only"})
+                    return
+                try:
+                    n = int(self.headers.get("Content-Length", 0))
+                    if n > MAX_BODY_BYTES:
+                        self._reply(413, {"error": "body too large"})
+                        return
+                    doc = json.loads(self.rfile.read(n))
+                    tenant = doc["tenant"]
+                    keys, ts, values = doc["keys"], doc["ts"], doc["values"]
+                except Exception:
+                    self._reply(400, {"error": "body must be JSON with "
+                                               "tenant/keys/ts/values"})
+                    return
+                try:
+                    code, payload, hdrs = service.ingest(
+                        tenant, keys, ts, values
+                    )
+                    self._reply(code, payload, hdrs)
+                except Exception:
+                    self._reply(500, {"error": traceback.format_exc()})
+
+            def do_GET(self):  # noqa: N802 (http.server API)
+                url = urlparse(self.path)
+                try:
+                    if url.path == "/healthz":
+                        self._reply(200, b"ok\n", ctype="text/plain")
+                    elif url.path == "/stats":
+                        self._reply(200, service.stats())
+                    elif url.path == "/metrics":
+                        reg = service._obs_registry
+                        if reg is None:
+                            self._reply(503, {"error": "no registry "
+                                              "attached (call attach_obs)"})
+                        else:
+                            self._reply(200, reg.render().encode("utf-8"),
+                                        ctype=PROM_CONTENT_TYPE)
+                    elif url.path == "/query":
+                        q = parse_qs(url.query)
+                        if "tenant" not in q:
+                            self._reply(400, {"error": "tenant= required"})
+                            return
+                        keys = None
+                        if "keys" in q:
+                            keys = [int(k) for part in q["keys"]
+                                    for k in part.split(",") if k]
+                        top = int(q.get("top", ["10"])[0])
+                        code, payload = service.query(
+                            q["tenant"][0], keys=keys, top=top
+                        )
+                        self._reply(code, payload)
+                    else:
+                        self._reply(404, {"error": f"no route {url.path}"})
+                except BrokenPipeError:
+                    pass
+                except Exception:
+                    self._reply(500, {"error": traceback.format_exc()})
+
+            def log_message(self, *a):  # quiet: no per-request stderr spam
+                pass
+
+        self._server = ThreadingHTTPServer(
+            (self.host, self._requested_port), Handler
+        )
+        self._server.daemon_threads = True
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="service-http",
+            daemon=True,
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._server is not None:
+            self._server.shutdown()
+            self._server.server_close()
+            self._server = None
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+        if self._owns_service:
+            self.service.stop()
+            self._owns_service = False
+
+    # -- address -----------------------------------------------------------
+
+    @property
+    def port(self) -> int:
+        if self._server is None:
+            raise RuntimeError("server not started")
+        return self._server.server_address[1]
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def __enter__(self) -> "ServiceHTTPServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

@@ -1,0 +1,160 @@
+"""Per-tenant admission state: token-bucket quotas and bounded queues.
+
+A tenant's ingest path is host-side bookkeeping only — numpy validation,
+a token-bucket check, a deque append — so HTTP handler threads never touch
+the device.  All device work happens on the single consumer thread
+(:mod:`repro.service.core`), which drains these queues in batched
+round-robin.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, Optional
+
+import numpy as np
+
+
+class TokenBucket:
+    """Thread-safe token bucket: ``rate`` tokens/s refill, ``burst`` cap.
+
+    ``try_take(n)`` either debits ``n`` tokens and returns ``(True, 0.0)``
+    or leaves the bucket untouched and returns ``(False, retry_after)`` —
+    the seconds until ``n`` tokens will have accrued (the 429
+    ``Retry-After`` hint).  ``clock`` is injectable for deterministic
+    tests.
+    """
+
+    def __init__(self, rate: float, burst: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self._clock = clock
+        self._tokens = float(burst)
+        self._t_last = clock()
+        self._lock = threading.Lock()
+
+    def _refill(self, now: float) -> None:
+        self._tokens = min(
+            self.burst, self._tokens + (now - self._t_last) * self.rate
+        )
+        self._t_last = now
+
+    def try_take(self, n: float) -> tuple:
+        with self._lock:
+            now = self._clock()
+            self._refill(now)
+            if self._tokens >= n:
+                self._tokens -= n
+                return True, 0.0
+            deficit = n - self._tokens
+            return False, deficit / self.rate if self.rate > 0 else 60.0
+
+    @property
+    def tokens(self) -> float:
+        with self._lock:
+            self._refill(self._clock())
+            return self._tokens
+
+
+@dataclasses.dataclass
+class Batch:
+    """One accepted ingest batch, queued host-side until the consumer
+    drains it (kept as numpy — no device work on the ingest path)."""
+
+    keys: np.ndarray        # (n,) int32, raw per-tenant keys
+    ts: np.ndarray          # (n,) float32, non-decreasing
+    xs: np.ndarray          # (n,) value dtype
+    t_enqueue: float        # perf_counter at accept (latency measurement)
+
+    @property
+    def n(self) -> int:
+        return int(self.keys.shape[0])
+
+
+class TenantState:
+    """Everything the service tracks per tenant.
+
+    Counter discipline: mutated only under the service's accounting lock
+    (handler threads and the consumer both take it); the queue is a deque
+    of whole :class:`Batch` objects — batches are atomic, a drained chunk
+    contains only whole batches of ONE tenant, so failed-admission drops
+    reported by the keyed store attribute cleanly.
+    """
+
+    def __init__(self, name: str, idx: int, bucket: TokenBucket,
+                 queue_batches: int):
+        self.name = name
+        self.idx = int(idx)
+        self.bucket = bucket
+        self.queue: Deque[Batch] = deque()
+        self.queue_limit = int(queue_batches)
+        self.last_ts: float = -np.inf   # monotone event-time enforcement
+        # counters (rows unless noted)
+        self.ingested = 0               # accepted into the queue
+        self.queryable = 0              # drained + synced into the store
+        self.throttled_batches = 0      # 429s
+        self.throttled = 0              # rows refused by quota
+        self.shed = 0                   # rows refused by backpressure
+        self.rejected_batches = 0       # 400/413s
+        self.dropped = 0                # rows dropped by failed admission
+
+    @property
+    def pending(self) -> int:
+        return self.ingested - self.queryable
+
+    def counters(self) -> dict:
+        return {
+            "ingested_rows": self.ingested,
+            "queryable_rows": self.queryable,
+            "pending_rows": self.pending,
+            "throttled_batches": self.throttled_batches,
+            "throttled_rows": self.throttled,
+            "shed_rows": self.shed,
+            "rejected_batches": self.rejected_batches,
+            "dropped_rows": self.dropped,
+        }
+
+
+def validate_batch(
+    keys, ts, xs, *, max_batch: int, key_limit: int, last_ts: float,
+    value_dtype: str,
+) -> tuple:
+    """Validate one ingest batch → ``(error, payload_or_arrays)``.
+
+    ``error`` is None on success (payload = ``(keys, ts, xs)`` as typed
+    numpy arrays) or an HTTP status code with a reason dict.  Enforced:
+    equal lengths, ``0 < n <= max_batch`` (413 beyond), keys in
+    ``[0, key_limit)``, finite non-decreasing timestamps that do not
+    precede the tenant's last accepted timestamp (the keyed store's
+    event-time precondition — disorder must be resolved upstream).
+    """
+    try:
+        k = np.asarray(keys, np.int64)
+        t = np.asarray(ts, np.float32)
+        x = np.asarray(
+            xs, np.int32 if value_dtype == "i32" else np.float32
+        )
+    except (TypeError, ValueError, OverflowError):
+        return 400, {"error": "malformed rows"}
+    if k.ndim != 1 or k.shape != t.shape or k.shape != x.shape:
+        return 400, {"error": "keys/ts/values must be equal-length 1-D"}
+    n = int(k.shape[0])
+    if n == 0:
+        return 400, {"error": "empty batch"}
+    if n > max_batch:
+        return 413, {"error": "batch too large", "max_batch": max_batch}
+    if k.min() < 0 or k.max() >= key_limit:
+        return 400, {"error": f"keys must be in [0, {key_limit})"}
+    if not np.all(np.isfinite(t)):
+        return 400, {"error": "timestamps must be finite"}
+    if n > 1 and np.any(np.diff(t) < 0):
+        return 400, {"error": "timestamps must be non-decreasing"}
+    if float(t[0]) < last_ts:
+        return 400, {
+            "error": "timestamps precede the tenant's last accepted batch"
+        }
+    return None, (k.astype(np.int32), t, x)

@@ -39,6 +39,9 @@ CASES = [
     # a plain sorted union — associative and commutative bit-exactly
     ("kll", monoids.kll_monoid(k=32, levels=4),
      st.integers(-100, 100).map(float), True),
+    # topk: with 3 lifted singletons no truncation triggers, and the
+    # canonical (count desc, key asc) re-sort makes the merge bit-exact
+    ("topk", monoids.topk_monoid(8), st.integers(0, 1000), True),
     ("mean", monoids.mean_monoid(), st.integers(-100, 100).map(float), False),
     ("geomean", monoids.geomean_monoid(),
      st.integers(1, 100).map(float), False),
@@ -118,6 +121,57 @@ def test_bloom_membership():
         bool(monoids.bloom_contains(filt, jnp.asarray(v))) for v in range(1000, 1100)
     )
     assert misses < 10  # false-positive rate sanity
+
+
+def test_topk_exact_below_capacity():
+    """≤ k distinct keys → exact counts, heaviest first, key tie-break."""
+    m = monoids.topk_monoid(4)
+    agg = m.identity()
+    for v in [1, 2, 1, 3, 1, 2, 1]:
+        agg = m.combine(agg, m.lift(v))
+    assert monoids.topk_items(agg) == [(1, 4), (2, 2), (3, 1)]
+
+
+def test_topk_heavy_hitters_survive_truncation():
+    """Keys heavier than the dropped tail stay resident past capacity."""
+    import jax
+
+    from repro.core.event_time import fold_axis0
+
+    rng = np.random.default_rng(0)
+    stream = np.concatenate(
+        [np.full(500, 9), np.full(300, 13), rng.integers(100, 200, 400)]
+    ).astype(np.int32)
+    rng.shuffle(stream)
+    m = monoids.topk_monoid(8)
+    agg = fold_axis0(m, jax.vmap(m.lift)(jnp.asarray(stream)))
+    items = monoids.topk_items(agg)
+    assert items[0] == (9, 500)
+    assert items[1] == (13, 300)
+
+
+def test_topk_batched_combine():
+    """Leading batch axes broadcast (the seg-scan calling convention)."""
+    import jax
+
+    m = monoids.topk_monoid(8)
+    a = jax.tree.map(lambda x: jnp.stack([x, x]), m.lift(3))
+    b = jax.tree.map(lambda x: jnp.stack([x, x]), m.lift(3))
+    out = m.combine(a, b)
+    assert out["keys"].shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(out["counts"][:, 0]), [2, 2])
+
+
+def test_hll_estimate_tracks_cardinality():
+    import jax
+
+    from repro.core.event_time import fold_axis0
+
+    m = monoids.hll_monoid(64)
+    for n in (50, 1000, 10_000):
+        agg = fold_axis0(m, jax.vmap(m.lift)(jnp.arange(n, dtype=jnp.int32)))
+        est = float(monoids.hll_estimate(agg))
+        assert abs(est - n) / n < 0.35, (n, est)
 
 
 def test_countmin_estimate():
